@@ -1,0 +1,36 @@
+"""Shared benchmark plumbing: CSV emission + timing."""
+from __future__ import annotations
+
+import csv
+import io
+import os
+import sys
+import time
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def emit(name: str, rows: list, header: list) -> None:
+    """Print rows as CSV and persist under artifacts/bench/<name>.csv."""
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, f"{name}.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    print(f"# {name} ({len(rows)} rows) -> {os.path.relpath(path)}")
+    w = csv.writer(sys.stdout)
+    w.writerow(header)
+    for r in rows[:40]:
+        w.writerow(r)
+    if len(rows) > 40:
+        print(f"# ... {len(rows) - 40} more rows in {path}")
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0

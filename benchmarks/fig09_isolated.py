@@ -1,0 +1,55 @@
+"""Paper Fig. 9: single-MoE-layer latency — EP / Hydra / FSE-DP (A2) /
+FSE-DP+paired (A3) across the four Table-I models × token counts.
+
+Also emits the Fig. 11 utilization-fluctuation trace with --timeline.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim import PROTOTYPE_2X2, PAPER_SPECS, iteration_workloads, simulate_layer
+from .common import emit
+
+TOKENS = (16, 64, 256, 1024)
+STRATS = ("ep", "hydra", "fse_dp", "fse_dp_paired")
+SEEDS = (0, 1, 2)     # ~ datasets (wikitext-2 / c4 style trace variation)
+
+
+def run(timeline: bool = False):
+    hw = PROTOTYPE_2X2
+    rows = []
+    for mname, spec in PAPER_SPECS.items():
+        for toks in TOKENS:
+            lat = {s: [] for s in STRATS}
+            for seed in SEEDS:
+                wl = iteration_workloads(spec, tokens_per_iter=toks,
+                                         num_chiplets=hw.num_chiplets,
+                                         seed=seed)[0]
+                for s in STRATS:
+                    lat[s].append(simulate_layer(hw, spec, wl, s).latency)
+            base = np.mean(lat["ep"])
+            for s in STRATS:
+                m = float(np.mean(lat[s]))
+                rows.append([mname, toks, s, round(m * 1e6, 1),
+                             round(base / m, 3)])
+    emit("fig09_isolated_layer",
+         rows, ["model", "tokens_per_iter", "strategy", "latency_us",
+                "speedup_vs_ep"])
+    if timeline:
+        wl = iteration_workloads(PAPER_SPECS["qwen3-a3b"], tokens_per_iter=256,
+                                 num_chiplets=hw.num_chiplets, seed=0)[0]
+        r = simulate_layer(hw, PAPER_SPECS["qwen3-a3b"], wl, "fse_dp_paired",
+                           record_timeline=True)
+        trows = [[round(t * 1e6, 2), c, kind, round(dur * 1e6, 2)]
+                 for t, c, kind, dur in r.timeline[:200]]
+        emit("fig11_13_timeline", trows, ["t_us", "chiplet", "event", "dur_us"])
+    return rows
+
+
+def main():
+    import sys
+    run(timeline="--timeline" in sys.argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Fig. 12: on-chip memory usage per strategy per model (peak
+package bytes while achieving the Fig. 9 latencies)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim import PROTOTYPE_2X2, PAPER_SPECS, iteration_workloads, simulate_layer
+from .common import emit
+
+STRATS = ("ep", "hydra", "fse_dp_naive", "fse_dp", "fse_dp_paired")
+
+
+def run():
+    hw = PROTOTYPE_2X2
+    rows = []
+    for mname, spec in PAPER_SPECS.items():
+        wl = iteration_workloads(spec, tokens_per_iter=64,
+                                 num_chiplets=hw.num_chiplets, seed=0)[0]
+        mems = {}
+        for s in STRATS:
+            r = simulate_layer(hw, spec, wl, s)
+            mems[s] = r.peak_buffer_bytes
+        for s in STRATS:
+            saving = 1.0 - mems[s] / max(mems["ep"], 1)
+            rows.append([mname, s, round(mems[s] / 2 ** 20, 1),
+                         round(100 * saving, 1)])
+    emit("fig12_memory", rows,
+         ["model", "strategy", "peak_package_MB", "saving_vs_ep_pct"])
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

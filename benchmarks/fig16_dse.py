@@ -1,0 +1,56 @@
+"""Paper Fig. 16: design-space exploration.
+
+(a) buffer size × DDR bandwidth at fixed 288 GB/s D2D
+(b) DDR bandwidth × D2D bandwidth at fixed 14 MB buffer
+Reports utilization for Qwen3-A3B @ 64 input tokens (paper setup).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.sim import PAPER_SPECS, PROTOTYPE_2X2, iteration_workloads, simulate_layer
+from .common import emit
+
+SPEC = PAPER_SPECS["qwen3-a3b"]
+
+
+def _util(hw, seeds=(0, 1)):
+    us = []
+    for seed in seeds:
+        wl = iteration_workloads(SPEC, tokens_per_iter=64,
+                                 num_chiplets=hw.num_chiplets, seed=seed)[0]
+        us.append(simulate_layer(hw, SPEC, wl, "fse_dp_paired").utilization)
+    return float(np.mean(us))
+
+
+def run():
+    rows = []
+    # (a) buffer MB x DDR GB/s per channel (4 channels)
+    for buf_mb in (2, 4, 8, 16, 32):
+        for ddr in (6.4, 12.8, 25.6, 51.2):
+            hw = dataclasses.replace(PROTOTYPE_2X2,
+                                     buffer_bytes=buf_mb * 2 ** 20,
+                                     ddr_gbps_per_channel=ddr * 1e9)
+            rows.append(["a_buffer_x_ddr", buf_mb, ddr * 4, 288,
+                         round(_util(hw), 4)])
+    # (b) DDR x D2D at 14MB buffer
+    for ddr in (6.4, 12.8, 25.6, 51.2):
+        for d2d in (72, 144, 288, 512):
+            hw = dataclasses.replace(PROTOTYPE_2X2,
+                                     buffer_bytes=14 * 2 ** 20,
+                                     ddr_gbps_per_channel=ddr * 1e9,
+                                     d2d_gbps=d2d * 1e9)
+            rows.append(["b_ddr_x_d2d", 14, ddr * 4, d2d, round(_util(hw), 4)])
+    emit("fig16_dse", rows,
+         ["sweep", "buffer_MB", "ddr_total_GBps", "d2d_GBps", "utilization"])
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

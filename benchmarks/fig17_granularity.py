@@ -1,0 +1,40 @@
+"""Paper Fig. 17: micro-slice granularity × on-chip expert storage
+latency heatmap (Phi-3.5 and Qwen3-A3B)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.sim import PAPER_SPECS, PROTOTYPE_2X2, iteration_workloads, simulate_layer
+from .common import emit
+
+
+def run():
+    rows = []
+    for mname in ("phi3.5-moe", "qwen3-a3b"):
+        spec = PAPER_SPECS[mname]
+        for buf_mb in (4, 8, 16, 32):
+            for micro in (1, 2, 4, 8, 16):
+                hw = dataclasses.replace(PROTOTYPE_2X2,
+                                         buffer_bytes=buf_mb * 2 ** 20)
+                lats = []
+                for seed in (0, 1):
+                    wl = iteration_workloads(spec, tokens_per_iter=64,
+                                             num_chiplets=hw.num_chiplets,
+                                             seed=seed)[0]
+                    lats.append(simulate_layer(hw, spec, wl, "fse_dp_paired",
+                                               micro_slices=micro).latency)
+                rows.append([mname, buf_mb, micro,
+                             round(float(np.mean(lats)) * 1e6, 1)])
+    emit("fig17_granularity", rows,
+         ["model", "buffer_MB", "micro_slices_per_chiplet_slice", "latency_us"])
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper Fig. 18: scalability (utilization) from 2x2 to 4x4 arrays,
+Qwen3-A3B on the C4-style trace."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim import PAPER_SPECS, iteration_workloads, scaled, simulate_layer
+from .common import emit
+
+STRATS = ("ep", "hydra", "fse_dp_paired")
+
+
+def run():
+    spec = PAPER_SPECS["qwen3-a3b"]
+    rows = []
+    for rows_cols in ((2, 2), (3, 3), (4, 4)):
+        hw = scaled(*rows_cols)
+        for strat in STRATS:
+            us = []
+            for seed in (0, 1, 2):
+                wl = iteration_workloads(spec, tokens_per_iter=256,
+                                         num_chiplets=hw.num_chiplets,
+                                         seed=seed)[0]
+                us.append(simulate_layer(hw, spec, wl, strat).utilization)
+            rows.append([f"{rows_cols[0]}x{rows_cols[1]}", strat,
+                         round(float(np.mean(us)), 4)])
+    emit("fig18_scalability", rows, ["array", "strategy", "utilization"])
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

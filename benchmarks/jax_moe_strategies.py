@@ -1,0 +1,91 @@
+"""TPU-adaptation analogue of Fig. 9/12: per-device weight bytes and HLO
+collective traffic of DP / TP / EP / FSE-DP MoE layers on a (2,4) mesh
+(8 host devices — runs in a subprocess so the parent stays 1-device).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import emit
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.configs.base import MoEConfig
+from repro.models import moe as moe_mod
+from repro.core import fse_dp, baselines
+from repro.parallel import meshctx
+from repro.launch.analysis import collective_bytes
+
+E, k, d, de = 16, 2, 256, 512
+moe = MoEConfig(num_experts=E, top_k=k, d_expert=de, micro_slices=4)
+params = moe_mod.moe_init(jax.random.PRNGKey(0), d, moe, "swiglu", jnp.bfloat16)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+B, S = 8, 64
+x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d), jnp.bfloat16)
+
+def lower(fn, w_specs):
+    in_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s), w_specs),
+             NamedSharding(mesh, P("data", "model", None)))
+    with meshctx.with_mesh(mesh):
+        return jax.jit(lambda p, x: fn(p, x, moe, "swiglu"),
+                       in_shardings=in_sh).lower(params_like(w_specs), x).compile()
+
+def params_like(_):
+    return params
+
+W = sum(int(v.size) * 2 for kk, v in params.items() if kk.startswith("w_"))
+rows = []
+specs_fse = {"router": {"w_router": P()}, "w_gate": P(None, None, "model"),
+             "w_up": P(None, None, "model"), "w_down": P(None, "model", None)}
+specs_ep = {"router": {"w_router": P()}, "w_gate": P("model", None, None),
+            "w_up": P("model", None, None), "w_down": P("model", None, None)}
+specs_dp = {"router": {"w_router": P()}, "w_gate": P(), "w_up": P(), "w_down": P()}
+
+for name, fn, specs, shard_frac in [
+        ("dp_replicated", fse_dp.fse_dp_moe_3d, specs_dp, 1.0),
+        ("tp", baselines.tp_moe_3d, specs_fse, 0.25),
+        ("ep", baselines.ep_moe_3d, specs_ep, 0.25),
+        ("fse_dp", fse_dp.fse_dp_moe_3d, specs_fse, 0.25)]:
+    compiled = lower(fn, specs)
+    coll = collective_bytes(compiled.as_text())
+    rows.append({"strategy": name,
+                 "weight_bytes_per_device": int(W * shard_frac),
+                 "coll_total": coll["total"],
+                 "all_to_all": coll["all-to-all"],
+                 "collective_permute": coll["collective-permute"],
+                 "all_gather": coll["all-gather"],
+                 "all_reduce": coll["all-reduce"] + coll["reduce-scatter"]})
+print(json.dumps(rows))
+"""
+
+
+def run():
+    env = dict(os.environ, PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(f"child failed: {out.stderr[-2000:]}")
+    data = json.loads(out.stdout.strip().splitlines()[-1])
+    rows = [[r["strategy"], r["weight_bytes_per_device"], int(r["coll_total"]),
+             int(r["all_to_all"]), int(r["collective_permute"]),
+             int(r["all_gather"]), int(r["all_reduce"])] for r in data]
+    emit("jax_moe_strategies", rows,
+         ["strategy", "weight_B_per_dev", "coll_total_B", "all_to_all_B",
+          "collective_permute_B", "all_gather_B", "all_reduce_B"])
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-(arch×shape×mesh)
+three-term roofline table (EXPERIMENTS.md §Roofline reads this CSV).
+
+Terms (seconds): compute = FLOPs/(chips·197T) · memory = bytes/(chips·819G)
+· collective = coll_bytes/(chips·50G).  FLOPs/bytes are the CPU
+cost_analysis values scaled by scan trip count (the CPU backend counts a
+while body once — see DESIGN.md §8); MODEL_FLOPS/HLO_FLOPS flags
+remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(art_dir: str = ART, tag: str = ""):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        r = json.load(open(f))
+        if (r.get("tag") or "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def rows_from(recs):
+    rows = []
+    for r in recs:
+        if r["status"] != "ok":
+            rows.append([r["arch"], r["shape"], r["mesh"], r["status"],
+                         r.get("reason") or r.get("error", "")[:60],
+                         "", "", "", "", "", "", ""])
+            continue
+        rl = r["roofline"]
+        trips = r.get("scan_trips", 1)
+        hlo_flops = r["cost_flops_per_device"] * trips * r["chips"]
+        ratio = r["model_flops"] / hlo_flops if hlo_flops else 0.0
+        rows.append([
+            r["arch"], r["shape"], r["mesh"], "ok", rl["dominant"],
+            f"{rl['compute_s']:.3e}", f"{rl['memory_s']:.3e}",
+            f"{rl['collective_s']:.3e}",
+            f"{r['per_device_bytes'] / 2**30:.2f}",
+            f"{r['model_flops']:.3e}", f"{hlo_flops:.3e}", f"{ratio:.3f}",
+        ])
+    return rows
+
+
+HEADER = ["arch", "shape", "mesh", "status", "dominant/skip-reason",
+          "compute_s", "memory_s", "collective_s", "mem_GiB_per_dev",
+          "model_flops", "hlo_flops_scaled", "model/hlo"]
+
+
+def run(tag: str = ""):
+    rows = rows_from(load(tag=tag))
+    emit("roofline" + (f"_{tag}" if tag else ""), rows, HEADER)
+    return rows
+
+
+def main():
+    import sys
+    run(sys.argv[1] if len(sys.argv) > 1 else "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Low-batch MoE serving with token buffering (the paper's target
+scenario): batched requests through the layer-stepped engine, comparing
+slack=0 vs slack>0 — identical outputs, fewer cold-expert loads.
+
+  PYTHONPATH=src python examples/serve_low_batch.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.models import api
+from repro.serving import Engine, ServeConfig
+
+
+def run_engine(params, cfg, slack, prompts, n_threshold=None):
+    eng = Engine(params, cfg, ServeConfig(max_batch=8, max_ctx=64,
+                                          buffering_slack=slack, theta_min=3))
+    if n_threshold:
+        eng.policy.n_threshold = n_threshold
+    rids = [eng.submit(p, max_new=12) for p in prompts]
+    t0 = time.time()
+    outs = eng.run()
+    dt = time.time() - t0
+    return eng, [outs[r] for r in rids], dt
+
+
+def main():
+    cfg = reduced_config("granite-moe-1b-a400m").replace(dtype="float32")
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, size=rng.integers(3, 10)).tolist()
+               for _ in range(6)]
+
+    eng0, outs0, dt0 = run_engine(params, cfg, 0.0, prompts)
+    eng1, outs1, dt1 = run_engine(params, cfg, 0.3, prompts, n_threshold=3)
+
+    assert outs0 == outs1, "token buffering must not change outputs"
+    print("outputs identical with and without token buffering ✓\n")
+    hdr = f"{'':18s}{'iterations':>11s}{'deferrals':>10s}{'expert loads':>13s}{'loads saved':>12s}"
+    print(hdr)
+    for label, e in (("slack=0.0", eng0), ("slack=0.3", eng1)):
+        s = e.stats
+        print(f"{label:18s}{s['iterations']:>11d}{s['deferrals']:>10d}"
+              f"{s['expert_loads']:>13d}{s['expert_loads_saved']:>12d}")
+    saved = eng1.stats["expert_loads_saved"]
+    total = eng0.stats["expert_loads"]
+    print(f"\ncold-expert DDR fetches avoided: {saved}/{total} "
+          f"({100*saved/max(total,1):.1f}%) at "
+          f"{eng1.stats['iterations']-eng0.stats['iterations']} extra iterations "
+          f"(the paper's QoS-for-efficiency trade)")
+    # per-layer paired-load order from live routing stats
+    t = eng1.trace[0]
+    print(f"\nexample paired-load order (iter {t['iter']}, layer {t['layer']}): "
+          f"{t['order'][:8]}... counts={t['counts'][t['order'][:8]].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

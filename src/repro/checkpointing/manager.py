@@ -1,0 +1,119 @@
+"""Atomic, mesh-agnostic checkpointing with auto-resume.
+
+Layout:
+  <dir>/step_0000100.tmp-<pid>/   (written fully, fsync'd)
+  <dir>/step_0000100/             (atomic rename — crash-safe)
+  <dir>/LATEST                    (text pointer, written last)
+
+Arrays are stored as a flat path->npy mapping; restore reshards onto
+the *current* mesh/sharding (elastic restart: a checkpoint taken on a
+512-chip mesh reloads onto whatever mesh is alive).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + f".tmp-{os.getpid()}"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    meta = {"step": step, "keys": sorted(arrays.keys()), "extra": extra or {}}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic publish
+    with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
+        f.write(os.path.basename(final))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(os.path.join(ckpt_dir, "LATEST.tmp"),
+               os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    name = open(ptr).read().strip()
+    path = os.path.join(ckpt_dir, name)
+    if not os.path.isdir(path):                # pointer ahead of a crash
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                       if d.startswith("step_") and not d.endswith("tmp"))
+        return steps[-1] if steps else None
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
+            shardings: Any = None):
+    """Restore into the structure of ``like`` (shapes/dtypes preserved).
+
+    ``shardings``: optional matching pytree of NamedSharding — arrays are
+    device_put onto it (elastic reshard onto the current mesh).
+    Returns (tree, step, extra).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        data = {k: z[k] for k in z.files}
+    meta = json.load(open(os.path.join(path, "meta.json")))
+
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(data)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+
+    def rebuild(tree):
+        leaves_path = jax.tree_util.tree_flatten_with_path(tree)
+        out = []
+        for path_, leaf in leaves_path[0]:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_)
+            arr = jnp.asarray(data[key], dtype=leaf.dtype)
+            if key in flat_shard:
+                arr = jax.device_put(arr, flat_shard[key])
+            out.append(arr)
+        return jax.tree_util.tree_unflatten(leaves_path[1], out)
+
+    return rebuild(like), meta["step"], meta.get("extra", {})
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                  if d.startswith("step_") and ".tmp" not in d)
+
+
+def gc_old(ckpt_dir: str, keep: int = 3):
+    steps = all_steps(ckpt_dir)
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)

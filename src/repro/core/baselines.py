@@ -1,0 +1,153 @@
+"""Baseline distributed MoE strategies the paper compares against.
+
+EP — expert parallelism (the de-facto baseline, paper §VI-A): each
+device on the ``model`` axis *owns* ``E/P`` full experts; tokens are
+routed to the owning device via ``all_to_all`` and routed back after
+expert compute.  Token buffers are capacity-bounded, so skewed routing
+drops tokens (or forces a large capacity factor) — the long-tail
+failure mode the paper profiles.
+
+TP — tensor parallelism: every expert's ``d_expert`` is sharded, tokens
+are **replicated** on the model axis, partial outputs all-reduced
+(the paper's critique: token duplication).
+
+DP (replicated experts) exists only as an accounting mode in the
+benchmarks — it needs no code beyond unsharded weights.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.parallel import meshctx
+from . import gating
+from .fse_dp import _expert_partial, shard_map, pmean_all
+
+
+def _capacity(T_loc: int, moe: MoEConfig) -> int:
+    import math
+    return max(1, math.ceil(T_loc * moe.top_k / moe.num_experts * moe.capacity_factor))
+
+
+# ---------------------------------------------------------------------------
+# EP — all-to-all dispatch to expert owners
+# ---------------------------------------------------------------------------
+
+def _local_ep(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes):
+    """x: (B_loc, S_loc, d) seq-sharded. w_*: (E_loc, d, de) expert-sharded."""
+    from repro.models.moe import dispatch_masks
+    B, S, d = x.shape
+    E = moe.num_experts
+    E_loc = E // P_
+    x2d = x.reshape(B * S, d)
+    T_loc = x2d.shape[0]
+    C = _capacity(T_loc, moe)
+
+    routing = gating.route({"w_router": wr}, x2d, top_k=moe.top_k)
+    dispatch, combine = dispatch_masks(routing, T_loc, E, C)          # (T,E,C)
+    xsend = jnp.einsum("tec,td->ecd", dispatch.astype(x2d.dtype), x2d)  # (E,C,d)
+    xsend = xsend.reshape(P_, E_loc, C, d)
+    # all-to-all: rows -> expert owners; received leading dim = source rank
+    xrecv = jax.lax.all_to_all(xsend, axis, split_axis=0, concat_axis=0, tiled=True)
+    xrecv = xrecv.reshape(P_, E_loc, C, d).transpose(1, 0, 2, 3).reshape(E_loc, P_ * C, d)
+
+    ye = _expert_partial(xrecv, None if w_g is None else w_g, w_u, w_d, activation)
+    ye = ye.astype(x.dtype)
+
+    ysend = ye.reshape(E_loc, P_, C, d).transpose(1, 0, 2, 3).reshape(P_ * E_loc, C, d)
+    yrecv = jax.lax.all_to_all(ysend.reshape(P_, E_loc, C, d), axis,
+                               split_axis=0, concat_axis=0, tiled=True)
+    yrecv = yrecv.reshape(E, C, d)
+    y = jnp.einsum("tec,ecd->td", combine.astype(jnp.float32),
+                   yrecv.astype(jnp.float32))
+    aux = pmean_all(gating.aux_load_balance_loss(routing, E), pm_axes)
+    return y.reshape(B, S, d).astype(x.dtype), aux
+
+
+def ep_moe_3d(params, x, moe: MoEConfig, activation, *, axis="model"):
+    mesh = meshctx.get_mesh()
+    P_ = 1 if mesh is None or axis not in mesh.axis_names else mesh.shape[axis]
+    if P_ == 1 or moe.num_experts % P_:
+        from .fse_dp import fse_dp_moe_3d
+        return fse_dp_moe_3d(params, x, moe, activation, axis=axis)
+    batch = meshctx.batch_axes(mesh, axis)
+    import numpy as _np
+    bsz = int(_np.prod([mesh.shape[a] for a in batch])) if batch else 1
+    if x.shape[0] % max(bsz, 1):
+        batch = None
+    x_spec = P(batch, axis, None)
+    w_g = params.get("w_gate")
+    fn = functools.partial(_local_ep, moe=moe, activation=activation, axis=axis, P_=P_, pm_axes=tuple(mesh.axis_names))
+    if w_g is None:
+        def fn2(x, wr, wu, wd):
+            return fn(x, wr, None, wu, wd)
+        return shard_map(fn2, mesh=mesh,
+                         in_specs=(x_spec, P(None, None), P(axis, None, None),
+                                   P(axis, None, None)),
+                         out_specs=(x_spec, P()))(
+            x, params["router"]["w_router"], params["w_up"], params["w_down"])
+
+    def fn3(x, wr, wg, wu, wd):
+        return fn(x, wr, wg, wu, wd)
+    return shard_map(fn3, mesh=mesh,
+                     in_specs=(x_spec, P(None, None), P(axis, None, None),
+                               P(axis, None, None), P(axis, None, None)),
+                     out_specs=(x_spec, P()))(
+        x, params["router"]["w_router"], w_g, params["w_up"], params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# TP — d_expert sharding, replicated tokens, all-reduce combine
+# ---------------------------------------------------------------------------
+
+def _local_tp(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes):
+    from repro.models.moe import dispatch_masks
+    B, S, d = x.shape
+    x2d = x.reshape(B * S, d)
+    T = x2d.shape[0]
+    C = _capacity(T, moe)
+    routing = gating.route({"w_router": wr}, x2d, top_k=moe.top_k)
+    dispatch, combine = dispatch_masks(routing, T, moe.num_experts, C)
+    xe = jnp.einsum("tec,td->ecd", dispatch.astype(x2d.dtype), x2d)
+    ye = _expert_partial(xe, w_g, w_u, w_d, activation)
+    y = jnp.einsum("tec,ecd->td", combine.astype(jnp.float32), ye)
+    y = jax.lax.psum(y, axis)
+    aux = gating.aux_load_balance_loss(routing, moe.num_experts)
+    aux = pmean_all(aux, pm_axes)
+    return y.reshape(B, S, d).astype(x.dtype), aux
+
+
+def tp_moe_3d(params, x, moe: MoEConfig, activation, *, axis="model"):
+    mesh = meshctx.get_mesh()
+    P_ = 1 if mesh is None or axis not in mesh.axis_names else mesh.shape[axis]
+    if P_ == 1:
+        from .fse_dp import fse_dp_moe_3d
+        return fse_dp_moe_3d(params, x, moe, activation, axis=axis)
+    batch = meshctx.batch_axes(mesh, axis)
+    import numpy as _np
+    bsz = int(_np.prod([mesh.shape[a] for a in batch])) if batch else 1
+    if x.shape[0] % max(bsz, 1):
+        batch = None
+    x_spec = P(batch, None, None)
+    fn = functools.partial(_local_tp, moe=moe, activation=activation, axis=axis, P_=P_, pm_axes=tuple(mesh.axis_names))
+    w_g = params.get("w_gate")
+    if w_g is None:
+        def fn2(x, wr, wu, wd):
+            return fn(x, wr, None, wu, wd)
+        return shard_map(fn2, mesh=mesh,
+                         in_specs=(x_spec, P(None, None), P(None, None, axis),
+                                   P(None, axis, None)),
+                         out_specs=(x_spec, P()))(
+            x, params["router"]["w_router"], params["w_up"], params["w_down"])
+
+    def fn3(x, wr, wg, wu, wd):
+        return fn(x, wr, wg, wu, wd)
+    return shard_map(fn3, mesh=mesh,
+                     in_specs=(x_spec, P(None, None), P(None, None, axis),
+                               P(None, None, axis), P(None, axis, None)),
+                     out_specs=(x_spec, P()))(
+        x, params["router"]["w_router"], w_g, params["w_up"], params["w_down"])

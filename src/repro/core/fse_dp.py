@@ -1,0 +1,252 @@
+"""FSE-DP — Fully Sharded Expert Data-parallelism (the paper's §III–IV).
+
+TPU-native realization of expert streaming:
+
+* every device on the ``model`` mesh axis holds ``1/P`` of **every**
+  expert's FFN weights, sliced along ``d_expert`` (exactly one copy of
+  each expert per model group — the paper's "pooled buffer");
+* tokens stay **stationary** (sequence-sharded over the same axis —
+  handed over reduce-scatter style from attention, so no replication);
+* expert slices **stream** around a logical ring via
+  ``jax.lax.ppermute`` (point-to-point collective-permute — the D2D
+  link analogue; *no all-to-all anywhere*);
+* each per-device slice is further cut into ``micro_slices`` so the
+  ring runs P·M finer steps; the scan carries the in-flight micro-slice
+  and XLA's async collective-permute overlaps the transfer of step
+  *s+1* with the grouped GEMM of step *s* — the paper's micro-slice
+  flow (Fig. 4) in SPMD form;
+* the partial-output sum over slices is order-invariant (elementwise
+  activation commutes with the d_expert split), which is the paper's
+  virtualization argument: trajectory timing/ordering is immaterial.
+
+Three execution modes, chosen statically from the token layout
+(paper Fig. 3(a) vs 3(b)):
+
+  stream — tokens seq-sharded, weight slices circulate  (train/prefill)
+  index  — tokens replicated; each device takes a 1/P token slice and
+           outputs are all-gathered (decode with enough tokens)
+  slice  — tiny-token fallback: weights stay put, every device computes
+           its d_expert slice for all tokens, partial outputs psum'd
+           (the paper's own observation that token-side exchange wins
+           when the token count is small)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.parallel import meshctx
+from . import gating
+
+try:  # jax>=0.6 exposes shard_map at top level
+    from jax import shard_map as _shard_map_mod  # type: ignore
+    shard_map = jax.shard_map
+except Exception:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+def pmean_all(x, axes):
+    """pmean over ``axes`` regardless of which of them x varies on
+    (pvary the missing ones first — vma-safe)."""
+    try:
+        vma = jax.typeof(x).vma
+        missing = tuple(a for a in axes if a not in vma)
+        if missing:
+            x = jax.lax.pvary(x, missing)
+    except Exception:
+        pass
+    return jax.lax.pmean(x, axes)
+
+
+# ---------------------------------------------------------------------------
+# local grouped-GEMM over one micro-slice
+# ---------------------------------------------------------------------------
+
+def _expert_partial(xe, w_g, w_u, w_d, activation):
+    """xe: (E,C,d); w_g/w_u: (E,d,m); w_d: (E,m,d) -> partial y (E,C,d) fp32."""
+    if activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edm->ecm", xe, w_g)) \
+            * jnp.einsum("ecd,edm->ecm", xe, w_u)
+    elif activation == "relu2":
+        h = jnp.square(jax.nn.relu(jnp.einsum("ecd,edm->ecm", xe, w_u)))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edm->ecm", xe, w_u))
+    return jnp.einsum("ecm,emd->ecd", h, w_d).astype(jnp.float32)
+
+
+def _ring_stream(xe, w_g, w_u, w_d, activation, axis, P_, micro_slices):
+    """Accumulate full expert outputs for local dispatched tokens ``xe``
+    while streaming weight micro-slices around the ``axis`` ring.
+
+    w_*: local shard (E, d, de_loc) / (E, de_loc, d).
+    """
+    E, C, d = xe.shape
+    de_loc = w_g.shape[-1] if w_g is not None else w_u.shape[-1]
+    M = max(1, min(micro_slices, de_loc))
+    while de_loc % M:
+        M -= 1  # largest feasible micro-slice count <= requested
+    mic = de_loc // M
+
+    ring = [(i, (i + 1) % P_) for i in range(P_)]
+    # zeros_like inherits xe's varying-manual-axes so the scan carry typechecks
+    acc = jnp.zeros_like(xe, jnp.float32)
+
+    for m in range(M):
+        sl = slice(m * mic, (m + 1) * mic)
+        cur = (
+            w_g[..., sl] if w_g is not None else None,
+            w_u[..., sl],
+            w_d[:, sl, :],
+        )
+
+        def step(carry, _):
+            acc, (cg, cu, cd) = carry
+            # Rule 1: forward the micro-slice being computed — the permute
+            # is issued first so XLA's async collective-permute overlaps
+            # it with the grouped GEMM below (micro-slice flow, Fig. 4b).
+            ng = jax.lax.ppermute(cg, axis, ring) if cg is not None else None
+            nu = jax.lax.ppermute(cu, axis, ring)
+            nd = jax.lax.ppermute(cd, axis, ring)
+            acc = acc + _expert_partial(xe, cg, cu, cd, activation)
+            return (acc, (ng, nu, nd)), None
+
+        (acc, _), _ = jax.lax.scan(step, (acc, cur), None, length=P_)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# shard_map bodies
+# ---------------------------------------------------------------------------
+
+def _dispatch(x2d, routing, moe):
+    """(xe, combiner) — combiner(ye fp32 (E,C,d)) -> y (T,d) fp32."""
+    from repro.models.moe import (capacity_of, dispatch_masks, dispatch_tables,
+                                  gather_dispatch, scatter_combine,
+                                  sorted_dispatch_enabled)
+    T = x2d.shape[0]
+    C = capacity_of(T, moe)
+    if sorted_dispatch_enabled():
+        idx, wts = dispatch_tables(routing, T, moe.num_experts, C)
+        xe = gather_dispatch(x2d, idx)
+        return xe, lambda ye: scatter_combine(ye, idx, wts, T)
+    dispatch, combine = dispatch_masks(routing, T, moe.num_experts, C)
+    xe = jnp.einsum("tec,td->ecd", dispatch.astype(x2d.dtype), x2d)
+    comb = lambda ye: jnp.einsum("tec,ecd->td", combine.astype(jnp.float32), ye)
+    return xe, comb
+
+
+def _local_moe_stream(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes):
+    """x: (B_loc, S_loc, d) — tokens stationary, weights stream."""
+    B, S, d = x.shape
+    x2d = x.reshape(B * S, d)
+    routing = gating.route({"w_router": wr}, x2d, top_k=moe.top_k)
+    xe, combine = _dispatch(x2d, routing, moe)
+    ye = _ring_stream(xe, w_g, w_u, w_d, activation, axis, P_, moe.micro_slices)
+    y = combine(ye.reshape(moe.num_experts, -1, d))
+    aux = gating.aux_load_balance_loss(routing, moe.num_experts)
+    aux = pmean_all(aux, pm_axes)
+    return y.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _local_moe_index(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes):
+    """x replicated over ``axis``: each rank handles a 1/P token slice,
+    streams the weights, then all-gathers the outputs."""
+    B, S, d = x.shape
+    x2d = x.reshape(B * S, d)
+    T = x2d.shape[0]
+    T_loc = T // P_
+    r = jax.lax.axis_index(axis)
+    x_loc = jax.lax.dynamic_slice_in_dim(x2d, r * T_loc, T_loc, 0)
+    routing = gating.route({"w_router": wr}, x_loc, top_k=moe.top_k)
+    xe, combine = _dispatch(x_loc, routing, moe)
+    ye = _ring_stream(xe, w_g, w_u, w_d, activation, axis, P_, moe.micro_slices)
+    y_loc = combine(ye.reshape(moe.num_experts, -1, d))
+    # scatter-into-zeros + psum == all-gather, but provably replicated
+    # under shard_map's varying-axes checker
+    y = jnp.zeros((T, d), jnp.float32)
+    y = jax.lax.dynamic_update_slice_in_dim(y, y_loc, r * T_loc, 0)
+    y = jax.lax.psum(y, axis).astype(x.dtype)
+    aux = pmean_all(gating.aux_load_balance_loss(routing, moe.num_experts), pm_axes)
+    return y.reshape(B, S, d), aux
+
+
+def _local_moe_slice(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes):
+    """Tiny-token fallback (paper Fig. 3(b) regime): weights stationary,
+    every rank computes its d_expert slice for all tokens, psum combine."""
+    B, S, d = x.shape
+    x2d = x.reshape(B * S, d)
+    routing = gating.route({"w_router": wr}, x2d, top_k=moe.top_k)
+    xe, combine = _dispatch(x2d, routing, moe)
+    ye = _expert_partial(xe, w_g, w_u, w_d, activation)
+    y = combine(ye)
+    y = jax.lax.psum(y, axis)
+    aux = gating.aux_load_balance_loss(routing, moe.num_experts)
+    aux = pmean_all(aux, pm_axes)
+    return y.reshape(B, S, d).astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+
+def pick_mode(B: int, S: int, P_: int) -> str:
+    if S % P_ == 0 and S >= P_:
+        return "stream"
+    if (B * S) % P_ == 0:
+        return "index"
+    return "slice"
+
+
+def fse_dp_moe_3d(params, x, moe: MoEConfig, activation, *, axis="model"):
+    """x: (B, S, d) global. Returns (y, aux). Falls back to the
+    single-device capacity path when no model-parallel mesh is active."""
+    mesh = meshctx.get_mesh()
+    P_ = 1 if mesh is None or axis not in mesh.axis_names else mesh.shape[axis]
+    if P_ == 1:
+        from repro.models.moe import moe_capacity
+        shape = x.shape
+        x2d = x.reshape(-1, shape[-1])
+        routing = gating.route(params["router"], x2d, top_k=moe.top_k)
+        y = moe_capacity(params, x2d, routing, moe, activation)
+        return y.reshape(shape), gating.aux_load_balance_loss(routing, moe.num_experts)
+
+    B, S, d = x.shape
+    mode = pick_mode(B, S, P_)
+    body = {"stream": _local_moe_stream,
+            "index": _local_moe_index,
+            "slice": _local_moe_slice}[mode]
+    batch = meshctx.batch_axes(mesh, axis)
+    import numpy as _np
+    bsz = int(_np.prod([mesh.shape[a] for a in batch])) if batch else 1
+    b_ax = batch if (batch and B % bsz == 0) else None
+
+    x_spec = P(b_ax, axis if mode == "stream" else None, None)
+    specs_in = (
+        x_spec,
+        P(None, None),            # router
+        P(None, None, axis),      # w_gate (E,d,de)
+        P(None, None, axis),      # w_up
+        P(None, axis, None),      # w_down (E,de,d)
+    )
+    specs_out = (x_spec, P())
+
+    fn = functools.partial(body, moe=moe, activation=activation, axis=axis, P_=P_, pm_axes=tuple(mesh.axis_names))
+    w_g = params.get("w_gate")
+    if w_g is None:
+        # relu2/gelu experts: no gate projection; reuse w_up spec slot
+        def fn2(x, wr, wu, wd):
+            return fn(x, wr, None, wu, wd)
+        return shard_map(fn2, mesh=mesh,
+                         in_specs=(specs_in[0], specs_in[1], specs_in[3], specs_in[4]),
+                         out_specs=specs_out)(
+            x, params["router"]["w_router"], params["w_up"], params["w_down"])
+
+    def fn3(x, wr, wg, wu, wd):
+        return fn(x, wr, wg, wu, wd)
+
+    return shard_map(fn3, mesh=mesh, in_specs=specs_in, out_specs=specs_out)(
+        x, params["router"]["w_router"], w_g, params["w_up"], params["w_down"])

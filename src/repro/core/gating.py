@@ -1,0 +1,52 @@
+"""Top-K expert gating (router) with load-balancing auxiliary loss.
+
+Routing follows the Mixtral/DeepSeek convention: softmax over all expert
+logits, select top-k, renormalize the selected probabilities.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+class Routing(NamedTuple):
+    indices: jnp.ndarray      # (T, k) int32 selected experts
+    weights: jnp.ndarray      # (T, k) renormalized gate weights
+    probs: jnp.ndarray        # (T, E) full softmax (for aux loss / stats)
+    combine: jnp.ndarray      # (T, E) scatter of weights into expert slots
+
+
+def router_init(key, d_model, num_experts, dtype):
+    return {"w_router": dense_init(key, d_model, num_experts, dtype, scale=0.02)}
+
+
+def route(params, x, *, top_k, jitter=0.0, key=None) -> Routing:
+    """x: (T, d) -> Routing over E experts."""
+    logits = (x @ params["w_router"]).astype(jnp.float32)     # (T, E)
+    if jitter and key is not None:
+        logits = logits + jitter * jax.random.normal(key, logits.shape)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, indices = jax.lax.top_k(probs, top_k)            # (T,k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    E = probs.shape[-1]
+    onehot = jax.nn.one_hot(indices, E, dtype=jnp.float32)    # (T,k,E)
+    combine = jnp.einsum("tk,tke->te", weights, onehot)       # (T,E)
+    return Routing(indices, weights.astype(x.dtype), probs, combine.astype(x.dtype))
+
+
+def aux_load_balance_loss(routing: Routing, num_experts: int) -> jnp.ndarray:
+    """Switch-transformer style: E * sum_e f_e * p_e."""
+    T = routing.probs.shape[0]
+    assign = (routing.combine > 0).astype(jnp.float32)        # (T,E)
+    f = assign.sum(0) / jnp.maximum(assign.sum(), 1.0)        # fraction routed
+    p = routing.probs.mean(0)                                 # mean prob
+    return num_experts * jnp.sum(f * p)
+
+
+def expert_token_counts(routing: Routing) -> jnp.ndarray:
+    """(E,) number of tokens activating each expert (the paper's n_e)."""
+    return (routing.combine > 0).sum(0)

@@ -1,0 +1,116 @@
+"""Scheduling policies from the paper (§IV-A, §V).
+
+These are host-side policies consumed by the chiplet simulator
+(``repro.sim``) and the serving engine (``repro.serving``): the
+paired-load expert ordering and the token-buffering QoS mechanism
+(Algorithm 2).  They operate on plain ints / numpy arrays so the same
+code drives both the cycle-level simulation and the JAX engine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Paired-load policy (§IV-A, Fig. 5)
+# ---------------------------------------------------------------------------
+
+def paired_load_order(token_counts: Sequence[int]) -> List[int]:
+    """Sort experts by activation count and pair opposite ends.
+
+    Returns the expert *load order* [hot1, cold1, hot2, cold2, ...] so
+    compute-bound (hot) and DDR-bound (cold) expert flows interleave.
+    Experts with zero tokens are appended last (they are candidates for
+    token buffering / skipping, not loading).
+    """
+    counts = np.asarray(token_counts)
+    active = [int(e) for e in np.argsort(-counts, kind="stable") if counts[e] > 0]
+    idle = [int(e) for e in np.argsort(-counts, kind="stable") if counts[e] == 0]
+    order: List[int] = []
+    lo, hi = 0, len(active) - 1
+    while lo <= hi:
+        order.append(active[lo])          # hot end
+        if hi != lo:
+            order.append(active[hi])      # cold end
+        lo += 1
+        hi -= 1
+    return order + idle
+
+
+def expert_pairs(token_counts: Sequence[int]) -> List[tuple]:
+    """(hot, cold) pairs per the paired-load policy; odd expert out pairs
+    with ``None``."""
+    order = paired_load_order(token_counts)
+    counts = np.asarray(token_counts)
+    order = [e for e in order if counts[e] > 0]
+    pairs = []
+    for i in range(0, len(order), 2):
+        pairs.append((order[i], order[i + 1] if i + 1 < len(order) else None))
+    return pairs
+
+
+# ---------------------------------------------------------------------------
+# Token buffering (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class QoSState:
+    """Per-request token-buffering bookkeeping (paper Algorithm 2)."""
+    timer: int = 0          # T_QoS(r)
+    fw_count: int = 0       # C_fw(r)
+    deferrals: int = 0      # total buffering events (stats)
+
+
+@dataclass
+class TokenBufferPolicy:
+    """Algorithm 2: defer a request at an MoE-layer boundary when it
+    activates a cold expert and has QoS slack.
+
+    ``n_threshold`` forward passes earn one buffering credit;
+    ``theta_min`` is the cold-expert token threshold.  ``slack``
+    (e.g. 0.10/0.20/0.30 in the paper's end-to-end runs) sets
+    n_threshold = ceil(1/slack) so a request can be deferred for at
+    most ~``slack`` of its forward passes.
+    """
+    theta_min: int = 4
+    n_threshold: int = 10
+    states: Dict[str, QoSState] = field(default_factory=dict)
+
+    @classmethod
+    def from_slack(cls, slack: float, theta_min: int = 4) -> "TokenBufferPolicy":
+        if slack <= 0:
+            return cls(theta_min=theta_min, n_threshold=1 << 30)
+        return cls(theta_min=theta_min, n_threshold=max(1, int(np.ceil(1.0 / slack))))
+
+    def state(self, rid: str) -> QoSState:
+        return self.states.setdefault(rid, QoSState())
+
+    def on_forward_pass(self, rid: str) -> None:
+        """Call once per completed forward pass of request ``rid``
+        (Algorithm 2 lines 2–5)."""
+        st = self.state(rid)
+        st.fw_count += 1
+        if st.fw_count >= self.n_threshold:
+            st.timer += 1
+            st.fw_count = 0
+
+    def should_defer(self, rid: str, activated_experts: Sequence[int],
+                     expert_token_counts: Sequence[int]) -> bool:
+        """Algorithm 2 lines 6–9: defer iff some activated expert is cold
+        (n_e < theta_min) and T_QoS > 0. Decrements the timer on defer."""
+        st = self.state(rid)
+        if st.timer <= 0:
+            return False
+        counts = np.asarray(expert_token_counts)
+        cold = any(counts[e] < self.theta_min for e in activated_experts)
+        if cold:
+            st.timer -= 1
+            st.deferrals += 1
+            return True
+        return False
+
+    def drop(self, rid: str) -> None:
+        self.states.pop(rid, None)

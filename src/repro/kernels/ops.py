@@ -1,0 +1,53 @@
+"""jit'd public wrappers around the Pallas kernels with ref fallbacks.
+
+``use_kernels(False)`` (or the REPRO_NO_PALLAS env var) routes every op
+to its pure-jnp oracle — the dry-run path uses this so the 512-device
+SPMD compile sees plain XLA ops.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import os
+
+import jax
+
+from . import ref
+from .streamed_moe import streamed_moe_kernel
+from .flash_attention import flash_attention_kernel
+from .ssd import ssd_intra_chunk_kernel
+
+_USE = contextvars.ContextVar("repro_use_pallas",
+                              default=not bool(os.environ.get("REPRO_NO_PALLAS")))
+
+
+@contextlib.contextmanager
+def use_kernels(enabled: bool):
+    tok = _USE.set(enabled)
+    try:
+        yield
+    finally:
+        _USE.reset(tok)
+
+
+def kernels_enabled() -> bool:
+    return _USE.get()
+
+
+def streamed_moe(xe, w_g, w_u, w_d, activation: str, **kw):
+    if kernels_enabled():
+        return streamed_moe_kernel(xe, w_g if w_g is not None else w_u,
+                                   w_u, w_d, activation=activation, **kw)
+    return ref.streamed_moe_ref(xe, w_g, w_u, w_d, activation)
+
+
+def flash_attention(q, k, v, **kw):
+    if kernels_enabled():
+        return flash_attention_kernel(q, k, v, **kw)
+    return ref.flash_attention_ref(q, k, v)
+
+
+def ssd_intra_chunk(xc, Bc, Cc, Ac, A_cumsum, **kw):
+    if kernels_enabled():
+        return ssd_intra_chunk_kernel(xc, Bc, Cc, Ac, A_cumsum, **kw)
+    return ref.ssd_intra_chunk_ref(xc, Bc, Cc, Ac, A_cumsum)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# streamed_moe: grouped expert GEMM over one d_expert micro-slice
+# ---------------------------------------------------------------------------
+
+def streamed_moe_ref(xe, w_g, w_u, w_d, activation: str):
+    """xe: (E,C,d); w_g/w_u: (E,d,m); w_d: (E,m,d) -> (E,C,d) fp32."""
+    if activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edm->ecm", xe, w_g)) \
+            * jnp.einsum("ecd,edm->ecm", xe, w_u)
+    elif activation == "relu2":
+        h = jnp.square(jax.nn.relu(jnp.einsum("ecd,edm->ecm", xe, w_u)))
+    elif activation == "gelu":
+        h = jax.nn.gelu(jnp.einsum("ecd,edm->ecm", xe, w_u))
+    else:
+        raise ValueError(activation)
+    return jnp.einsum("ecm,emd->ecd", h, w_d).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (causal)
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(q, k, v):
+    """q,k,v: (B,S,H,hd) (kv already head-broadcast) -> (B,S,H,hd)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / jnp.sqrt(jnp.float32(hd))
+    Sq, Sk = q.shape[1], k.shape[1]
+    mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None] + (Sk - Sq)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+# ---------------------------------------------------------------------------
+# SSD intra-chunk (Mamba-2)
+# ---------------------------------------------------------------------------
+
+def _segsum(x):
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    keep = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(keep, out, -jnp.inf)
+
+
+def ssd_intra_chunk_ref(xc, Bc, Cc, Ac, A_cumsum):
+    """Intra-chunk SSD terms.
+
+    xc: (b,nc,c,h,p); Bc/Cc: (b,nc,c,h,n); Ac/A_cumsum: (b,h,nc,c)
+    Returns Y_diag (b,nc,c,h,p), states (b,nc,h,p,n)  — both fp32.
+    """
+    L = jnp.exp(_segsum(Ac))
+    Y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", Cc, Bc, L, xc)
+    decay_states = jnp.exp(A_cumsum[:, :, :, -1:] - A_cumsum)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", Bc, decay_states, xc)
+    return Y_diag.astype(jnp.float32), states.astype(jnp.float32)

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: Mamba-2 SSD intra-chunk terms.
+
+For each (batch·chunk, head) grid cell the kernel holds one chunk of
+X/B/C plus the per-chunk decay row in VMEM and produces the
+intra-chunk output term and the chunk's contribution to the inter-chunk
+state.  The O(c²) semiseparable mask L = exp(segsum(A)) is built with
+iota inside the kernel (no HBM traffic for the mask).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _kernel(x_ref, b_ref, c_ref, a_ref, acum_ref, y_ref, st_ref, *, chunk):
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)        # (c, p)
+    Bm = b_ref[0, 0, :, 0, :].astype(jnp.float32)       # (c, n)
+    Cm = c_ref[0, 0, :, 0, :].astype(jnp.float32)       # (c, n)
+    acum = acum_ref[0, 0, 0, :].astype(jnp.float32)     # (c,)
+
+    # L[i, j] = exp(acum[i] - acum[j]) for i >= j else 0
+    diff = acum[:, None] - acum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+
+    scores = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32) * L  # (c,c)
+    y_ref[0, 0, :, 0, :] = jnp.dot(scores, x, preferred_element_type=jnp.float32)
+
+    decay = jnp.exp(acum[-1] - acum)                    # (c,)
+    st_ref[0, 0, 0] = jnp.dot((Bm * decay[:, None]).T, x,
+                              preferred_element_type=jnp.float32).T  # (p,n)
+
+
+def ssd_intra_chunk_kernel(xc, Bc, Cc, Ac, A_cumsum, *, interpret: bool | None = None):
+    """xc: (b,nc,c,h,p); Bc/Cc: (b,nc,c,h,n); Ac/A_cumsum: (b,h,nc,c).
+
+    Returns (Y_diag (b,nc,c,h,p), states (b,nc,h,p,n)) in fp32.
+    """
+    b, nc, c, h, p = xc.shape
+    n = Bc.shape[-1]
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    grid = (b, nc, h)
+
+    y, st = pl.pallas_call(
+        functools.partial(_kernel, chunk=c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, c, 1, p), lambda i, j, k: (i, j, 0, k, 0)),
+            pl.BlockSpec((1, 1, c, 1, n), lambda i, j, k: (i, j, 0, k, 0)),
+            pl.BlockSpec((1, 1, c, 1, n), lambda i, j, k: (i, j, 0, k, 0)),
+            pl.BlockSpec((1, 1, 1, c), lambda i, j, k: (i, k, j, 0)),   # Ac (b,h,nc,c)
+            pl.BlockSpec((1, 1, 1, c), lambda i, j, k: (i, k, j, 0)),   # A_cumsum
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, 1, p), lambda i, j, k: (i, j, 0, k, 0)),
+            pl.BlockSpec((1, 1, 1, p, n), lambda i, j, k: (i, j, k, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, c, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xc, Bc, Cc, Ac, A_cumsum)
+    return y, st

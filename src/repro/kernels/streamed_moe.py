@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: grouped expert GEMM over one d_expert micro-slice.
+
+This is the compute hot-spot of FSE-DP's ring step (paper §IV): the
+kernel body is the per-chiplet "SRAM" level of the adaptation — it
+holds exactly **one weight micro-slice** (w_g/w_u: (d, m), w_d: (m, d))
+plus one token tile in VMEM while computing the partial expert output,
+mirroring the paper's claim that on-chip residency is one micro-slice
+per stream.  HBM→VMEM pipelining across grid steps is Pallas's
+automatic double-buffering of the BlockSpec'd operands (the DDR→SRAM
+flow of Fig. 6); the D2D hop between chips is the ``ppermute`` in
+``repro.core.fse_dp`` one level up.
+
+Grid: (E, C/Tc) — experts outer so weight blocks are revisited across
+token tiles of the same expert; token tiles inner.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TOKEN_TILE = 128
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, activation):
+    x = x_ref[0]                      # (Tc, d)
+    wu = wu_ref[0]                    # (d, m)
+    if activation == "swiglu":
+        wg = wg_ref[0]
+        h = jax.nn.silu(jnp.dot(x, wg, preferred_element_type=jnp.float32)) \
+            * jnp.dot(x, wu, preferred_element_type=jnp.float32)
+    elif activation == "relu2":
+        h = jnp.square(jnp.maximum(
+            jnp.dot(x, wu, preferred_element_type=jnp.float32), 0.0))
+    else:  # gelu
+        h = jax.nn.gelu(jnp.dot(x, wu, preferred_element_type=jnp.float32))
+    wd = wd_ref[0]                    # (m, d)
+    o_ref[0] = jnp.dot(h.astype(wd.dtype), wd,
+                       preferred_element_type=jnp.float32)
+
+
+def streamed_moe_kernel(xe, w_g, w_u, w_d, *, activation: str,
+                        token_tile: int = DEFAULT_TOKEN_TILE,
+                        interpret: bool | None = None):
+    """xe: (E,C,d); w_g/w_u: (E,d,m); w_d: (E,m,d) -> (E,C,d) float32."""
+    E, C, d = xe.shape
+    m = w_u.shape[-1]
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    Tc = min(token_tile, C)
+    pad = (-C) % Tc
+    if pad:
+        xe = jnp.pad(xe, ((0, 0), (0, pad), (0, 0)))
+    Cp = C + pad
+    grid = (E, Cp // Tc)
+
+    if activation != "swiglu":
+        w_g = w_u  # placeholder operand; kernel ignores it
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Tc, d), lambda e, c: (e, c, 0)),   # token tile
+            pl.BlockSpec((1, d, m), lambda e, c: (e, 0, 0)),    # w_gate slice
+            pl.BlockSpec((1, d, m), lambda e, c: (e, 0, 0)),    # w_up slice
+            pl.BlockSpec((1, m, d), lambda e, c: (e, 0, 0)),    # w_down slice
+        ],
+        out_specs=pl.BlockSpec((1, Tc, d), lambda e, c: (e, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, Cp, d), jnp.float32),
+        interpret=interpret,
+    )(xe, w_g, w_u, w_d)
+    return out[:, :C]

@@ -1,0 +1,86 @@
+"""Compiled-artifact analysis: collective-byte parsing + roofline terms.
+
+collective_bytes is not in ``cost_analysis()`` — we parse the
+(post-SPMD, per-device) HLO text and sum the output-shape bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op ("-start" variants counted once, "-done"
+skipped).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+# v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"([a-z0-9\-]+)(?:-start)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-category byte totals from HLO text (per device)."""
+    out = {c: 0.0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        base = op[:-6] if op.endswith("-start") else op
+        if base.endswith("-done"):
+            continue
+        if base in _COLLECTIVES:
+            out[base] += _shape_bytes(shape_str)
+            out["count"] += 1
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int) -> Dict[str, float]:
+    """Three roofline terms in seconds.
+
+    ``flops``/``hbm_bytes``/``coll_bytes`` are GLOBAL totals (summed over
+    devices); the dry-run records per-device numbers × chips.
+    """
+    compute = flops / (chips * PEAK_FLOPS)
+    memory = hbm_bytes / (chips * HBM_BW)
+    collective = coll_bytes / (chips * ICI_BW)
+    dom = max(("compute", compute), ("memory", memory),
+              ("collective", collective), key=lambda kv: kv[1])
+    return {"compute_s": compute, "memory_s": memory, "collective_s": collective,
+            "dominant": dom[0], "bound_s": dom[1]}
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D train / 2·N·D prefill / 2·N·B decode (active params)."""
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.global_batch * shape.seq_len
+    return 2.0 * n_act * shape.global_batch            # one token per sequence

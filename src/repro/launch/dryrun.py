@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production mesh and record memory / cost / collective analysis.
+
+MUST be run as its own process (the device-count flag is set before any
+jax import):
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --multi-pod
+
+Artifacts land in artifacts/dryrun/<arch>__<shape>__<mesh>.json and are
+consumed by benchmarks/roofline.py (EXPERIMENTS.md §Dry-run/§Roofline).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.shapes import SHAPES, SHAPE_ORDER, applicable
+from repro.kernels import ops as kops
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+from repro.parallel import meshctx
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             out_dir: str = ARTIFACT_DIR, verbose: bool = True,
+             distributed: bool = True, tag: str = "", opts: tuple = ()) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "status": "skip", "reason": why, "tag": tag}
+    if not ok:
+        if verbose:
+            print(f"[skip] {arch} × {shape_name}: {why}")
+        return _write(rec, out_dir)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rec["opts"] = list(opts)
+    t0 = time.time()
+    try:
+        with meshctx.with_mesh(mesh), kops.use_kernels(False), \
+                meshctx.with_opts(*opts):
+            fn, in_sh, out_sh, structs = build_step(cfg, shape, mesh,
+                                                    distributed=distributed)
+            if shape.kind == "train":
+                donate = (0, 1)
+            elif shape.kind == "prefill":
+                donate = ()
+            else:
+                donate = (1,)
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*structs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        try:
+            hlo = compiled.as_text()
+        except Exception:
+            hlo = lowered.as_text()
+        coll = analysis.collective_bytes(hlo)
+
+        mem_fields = {}
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            mem_fields[f] = int(getattr(mem, f, 0) or 0)
+
+        flops_dev = float(cost.get("flops", 0.0))
+        bytes_dev = float(cost.get("bytes accessed", 0.0))
+        rec.update({
+            "status": "ok",
+            "chips": int(chips),
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": mem_fields,
+            "per_device_bytes": mem_fields["argument_size_in_bytes"]
+            + mem_fields["temp_size_in_bytes"],
+            "cost_flops_per_device": flops_dev,
+            "cost_bytes_per_device": bytes_dev,
+            "collectives_per_device": coll,
+            "model_flops": analysis.model_flops(cfg, shape),
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "hlo_ops": hlo.count("\n"),
+            # XLA:CPU cost_analysis counts a while-loop (scan) body ONCE —
+            # scan_trips lets the roofline scale the per-layer terms.
+            "scan_trips": _scan_trips(cfg),
+        })
+        trips = rec["scan_trips"]
+        rec["roofline"] = analysis.roofline_terms(
+            flops_dev * trips * chips, bytes_dev * trips * chips,
+            coll["total"] * trips * chips, chips)
+        rec["roofline_uncorrected"] = analysis.roofline_terms(
+            flops_dev * chips, bytes_dev * chips, coll["total"] * chips, chips)
+        if verbose:
+            print(f"[ok] {arch} × {shape_name} × {mesh_name}: "
+                  f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+                  f"mem/dev {rec['per_device_bytes']/2**30:.2f} GiB "
+                  f"flops/dev {flops_dev:.3e} coll/dev {coll['total']:.3e}B "
+                  f"dominant={rec['roofline']['dominant']}")
+            print("  memory_analysis:", mem_fields)
+    except Exception as e:  # record failures — they are bugs to fix
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+        if verbose:
+            print(f"[ERROR] {arch} × {shape_name} × {mesh_name}: {e}")
+    return _write(rec, out_dir)
+
+
+def _scan_trips(cfg) -> int:
+    from repro.models.transformer import period_plan
+    if cfg.is_encoder_decoder:
+        return cfg.num_layers
+    p, _ = period_plan(cfg)
+    return cfg.num_layers // p
+
+
+def _write(rec: dict, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"__{rec['tag']}" if rec.get("tag") else ""
+    path = os.path.join(out_dir, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (assigned 10)")
+    ap.add_argument("--shape", default="all", choices=["all"] + SHAPE_ORDER)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    ap.add_argument("--tag", default="", help="artifact suffix (perf variants)")
+    ap.add_argument("--opts", default="",
+                    help="comma list: sorted,sp_attn,scatter_cache")
+    args = ap.parse_args()
+    opts = tuple(o for o in args.opts.split(",") if o)
+    if opts and not args.tag:
+        args.tag = "+".join(opts)
+
+    archs = ASSIGNED_ARCHS if args.arch == "all" else [args.arch]
+    shapes = SHAPE_ORDER if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for arch in archs:
+        for sh in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, sh, multi_pod=mp, out_dir=args.out,
+                               tag=args.tag, opts=opts)
+                failures += rec["status"] == "error"
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

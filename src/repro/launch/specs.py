@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct stand-ins for every model input of every
+(architecture × shape) cell — weak-type-correct, shardable, and never
+allocating (the dry-run pattern).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models import api
+
+WHISPER_TEXT_LEN = 448      # decoder length for enc-dec train/prefill cells
+WHISPER_MEMORY_LEN = 1500   # encoder memory length for decode cells
+
+_KEY = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: api.init_params(k, cfg), _KEY)
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Model inputs for a train/prefill cell (tokens + frontend stubs)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.is_encoder_decoder:
+        T = WHISPER_TEXT_LEN
+        return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), dt),
+                "tokens": jax.ShapeDtypeStruct((B, T), i32),
+                "labels": jax.ShapeDtypeStruct((B, T), i32)}
+    if cfg.frontend and cfg.frontend.kind == "vision":
+        Pfx = cfg.frontend.num_prefix_tokens
+        St = S - Pfx
+        return {"prefix_embeds": jax.ShapeDtypeStruct((B, Pfx, cfg.d_model), dt),
+                "tokens": jax.ShapeDtypeStruct((B, St), i32),
+                "labels": jax.ShapeDtypeStruct((B, St), i32)}
+    return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32)}
+
+
+def decode_structs(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[Any, Any, Any]:
+    """(caches, token, cache_len) structs for a decode cell: one new token
+    against a KV cache of seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    p = params_struct(cfg)
+    caches = jax.eval_shape(
+        lambda pp: api.init_decode_caches(pp, cfg, B, S, memory_len=WHISPER_MEMORY_LEN), p)
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    cache_len = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return caches, token, cache_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """All ShapeDtypeStruct inputs for the cell's step function."""
+    if shape.kind in ("train", "prefill"):
+        return batch_struct(cfg, shape)
+    caches, token, cache_len = decode_structs(cfg, shape)
+    return {"caches": caches, "token": token, "cache_len": cache_len}

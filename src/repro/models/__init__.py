@@ -1,0 +1,2 @@
+from . import api, attention, layers, mamba2, mlp, moe, transformer, whisper
+from .api import init_params, loss_fn, prefill_fn, decode_fn, init_decode_caches

@@ -1,0 +1,120 @@
+"""Unified model API — family dispatch for init / train loss / prefill / decode.
+
+This is the surface the launcher, trainer, serving engine, smoke tests
+and dry-run all use.  Batches are dicts (see ``input_specs`` in
+``repro.launch.specs`` for the exact keys per shape cell).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import transformer, whisper
+
+
+def init_params(key, cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return whisper.init_encdec(key, cfg)
+    return transformer.init_lm(key, cfg)
+
+
+def _xent(logits, labels, ignore_label=-1):
+    """Mean token cross-entropy in fp32; labels==ignore_label are masked.
+
+    The gold logit is picked with an iota-compare (not a gather) so a
+    vocab-sharded logits tensor never needs an all-gather."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    gold = jnp.sum(jnp.where(iota == labels[..., None], lf, 0.0), axis=-1)
+    nll = logz - gold
+    mask = (labels != ignore_label).astype(jnp.float32)
+    return jnp.sum(nll * mask), jnp.sum(mask)
+
+
+CE_CHUNK = 512
+
+
+def fused_xent(h, head, labels, ignore_label=-1):
+    """Fused unembed + CE, chunked over the sequence: full (B,S,V) f32
+    logits are never materialized (peak = one chunk, recomputed in bwd).
+    A non-divisible tail is handled as one extra direct chunk."""
+    B, S, d = h.shape
+
+    @jax.checkpoint
+    def one(args):
+        hb, lb = args
+        return _xent(hb @ head, lb, ignore_label)
+
+    if S <= CE_CHUNK:
+        tot, cnt = _xent(h @ head, labels, ignore_label)
+        return tot / jnp.maximum(cnt, 1.0)
+    nc = S // CE_CHUNK
+    main = nc * CE_CHUNK
+    hc = jnp.moveaxis(h[:, :main].reshape(B, nc, CE_CHUNK, d), 1, 0)
+    lc = jnp.moveaxis(labels[:, :main].reshape(B, nc, CE_CHUNK), 1, 0)
+    tot, cnt = jax.lax.map(one, (hc, lc))
+    tot, cnt = jnp.sum(tot), jnp.sum(cnt)
+    if main < S:
+        t2, c2 = one((h[:, main:], labels[:, main:]))
+        tot, cnt = tot + t2, cnt + c2
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _head(params):
+    head = params.get("lm_head")
+    return head if head is not None else params["embed"].T
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, moe_impl=None, remat=False,
+            use_flash=False, unshard=False):
+    """Training loss (CE + MoE aux). Returns (loss, metrics)."""
+    if cfg.is_encoder_decoder:
+        memory = whisper.encode(params, batch["frames"], cfg, remat=remat)
+        h = whisper.decode_train(params, batch["tokens"], memory, cfg,
+                                 remat=remat, return_hidden=True)
+        ce = fused_xent(h, params["embed"].T, batch["labels"])
+        return ce, {"ce": ce, "aux": jnp.zeros(())}
+    prefix = batch.get("prefix_embeds")
+    h, aux = transformer.forward(params, batch["tokens"], cfg,
+                                 prefix_embeds=prefix, moe_impl=moe_impl,
+                                 remat=remat, use_flash=use_flash,
+                                 unshard=unshard, return_hidden=True)
+    labels = batch["labels"]
+    if prefix is not None:  # VLM: loss only on the text positions
+        h = h[:, prefix.shape[1]:]
+    ce = fused_xent(h, _head(params), labels)
+    coef = cfg.moe.aux_loss_coef if cfg.moe else 0.0
+    return ce + coef * aux, {"ce": ce, "aux": aux}
+
+
+def prefill_fn(params, batch, cfg: ModelConfig, max_seq: int, *, moe_impl=None):
+    """Prompt processing -> (logits, caches)."""
+    if cfg.is_encoder_decoder:
+        memory = whisper.encode(params, batch["frames"], cfg)
+        caches = whisper.init_decode_caches(params, memory, cfg,
+                                            batch["frames"].shape[0], max_seq)
+        logits = whisper.decode_train(params, batch["tokens"], memory, cfg)
+        return logits, caches
+    return transformer.prefill(params, batch["tokens"], cfg, max_seq,
+                               prefix_embeds=batch.get("prefix_embeds"),
+                               moe_impl=moe_impl)
+
+
+def decode_fn(params, token, caches, cache_len, cfg: ModelConfig, *,
+              moe_impl=None, unshard=False):
+    """One decode step -> (logits, new caches)."""
+    if cfg.is_encoder_decoder:
+        return whisper.decode_step(params, token, caches, cache_len, cfg)
+    return transformer.decode_step(params, token, caches, cache_len, cfg,
+                                   moe_impl=moe_impl, unshard=unshard)
+
+
+def init_decode_caches(params, cfg: ModelConfig, batch: int, max_seq: int,
+                       memory_len: int = 1500):
+    """Fresh (empty) decode caches for serve_step lowering."""
+    if cfg.is_encoder_decoder:
+        mem = jnp.zeros((batch, memory_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        return whisper.init_decode_caches(params, mem, cfg, batch, max_seq)
+    return transformer.init_caches(cfg, batch, max_seq)

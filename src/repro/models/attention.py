@@ -1,0 +1,210 @@
+"""GQA attention: full causal (train / prefill), cross, and KV-cache decode.
+
+The XLA path is written so the SPMD partitioner can shard heads over the
+``model`` axis and batch over ``(pod, data)``.  A Pallas flash-attention
+kernel (``repro.kernels.flash_attention``) is available behind
+``use_flash`` for the causal path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (B, S, n_kv, hd)
+    v: jnp.ndarray          # (B, S, n_kv, hd)
+
+
+def attn_init(key, d_model, n_heads, n_kv, head_dim, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _repeat_kv(k, n_heads):
+    """(B,S,n_kv,hd) -> (B,S,n_heads,hd) by group broadcast."""
+    n_kv = k.shape[-2]
+    if n_kv == n_heads:
+        return k
+    rep = n_heads // n_kv
+    return jnp.repeat(k, rep, axis=-2)
+
+
+def _sdpa(q, k, v, mask=None):
+    """q:(B,Sq,H,hd) k,v:(B,Sk,H,hd); fp32 softmax."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    if mask is not None:
+        scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def causal_mask(sq: int, sk: int):
+    # query i attends to keys j <= i + (sk - sq)
+    i = jnp.arange(sq)[:, None]
+    j = jnp.arange(sk)[None, :]
+    return (j <= i + (sk - sq))[None, None]  # (1,1,Sq,Sk)
+
+
+# chunk the query dim above this length — keeps live attention scores
+# O(chunk·Sk) instead of O(Sq·Sk) (the pure-XLA flash-equivalent used by
+# the 32k prefill cells; the Pallas kernel covers the TPU fast path)
+CHUNKED_THRESHOLD = 4096
+QUERY_CHUNK = 1024
+
+
+def _chunked_sdpa(q, k, v, *, causal: bool):
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    c = QUERY_CHUNK
+    nq = Sq // c
+    qb = jnp.moveaxis(q.reshape(B, nq, c, H, hd), 1, 0)      # (nq,B,c,H,hd)
+
+    def blk(args):
+        i, qi = args
+        s = jnp.einsum("bqhd,bkhd->bhqk", qi, k).astype(jnp.float32)
+        s = s / jnp.sqrt(jnp.float32(hd))
+        if causal:
+            qpos = i * c + jnp.arange(c)[:, None]
+            kpos = jnp.arange(Sk)[None, :]
+            s = jnp.where((kpos <= qpos + (Sk - Sq))[None, None], s,
+                          jnp.float32(-1e30))
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+    out = jax.lax.map(blk, (jnp.arange(nq), qb))             # (nq,B,c,H,hd)
+    return jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, hd)
+
+
+def attention(params, x, *, n_heads, n_kv, head_dim, rope_theta,
+              positions=None, causal=True, use_flash=False):
+    """Full self-attention. x: (B,S,d)."""
+    from repro.parallel import meshctx
+    if meshctx.opt_enabled("sp_attn"):
+        # explicit SP entry: one all-gather of the (seq-sharded) input
+        # instead of partitioner-chosen activation reshards per matmul
+        from repro.parallel.sharding import constrain_batch_only
+        x = constrain_batch_only(x)
+    B, S, _ = x.shape
+    q = _split_heads(x @ params["wq"], n_heads, head_dim)
+    k = _split_heads(x @ params["wk"], n_kv, head_dim)
+    v = _split_heads(x @ params["wv"], n_kv, head_dim)
+    if rope_theta:
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    if use_flash and causal:
+        from repro.kernels import flash_ops
+        out = flash_ops.flash_attention(q, _repeat_kv(k, n_heads), _repeat_kv(v, n_heads))
+    else:
+        kf = _repeat_kv(k, n_heads)
+        vf = _repeat_kv(v, n_heads)
+        if S >= CHUNKED_THRESHOLD and S % QUERY_CHUNK == 0:
+            out = _chunked_sdpa(q, kf, vf, causal=causal)
+        else:
+            mask = causal_mask(S, S) if causal else None
+            out = _sdpa(q, kf, vf, mask)
+    return out.reshape(B, S, n_heads * head_dim) @ params["wo"]
+
+
+def cross_attention(params, x, memory, *, n_heads, n_kv, head_dim):
+    """x: (B,Sq,d) attends to memory (B,Sk,d). No RoPE, no mask."""
+    B, Sq, _ = x.shape
+    q = _split_heads(x @ params["wq"], n_heads, head_dim)
+    k = _split_heads(memory @ params["wk"], n_kv, head_dim)
+    v = _split_heads(memory @ params["wv"], n_kv, head_dim)
+    out = _sdpa(q, _repeat_kv(k, n_heads), _repeat_kv(v, n_heads))
+    return out.reshape(B, Sq, n_heads * head_dim) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Decode path (one new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch, seq, n_kv, head_dim, dtype):
+    z = jnp.zeros((batch, seq, n_kv, head_dim), dtype)
+    return KVCache(z, z)
+
+
+def attention_decode(params, x, cache: KVCache, cache_len, *,
+                     n_heads, n_kv, head_dim, rope_theta,
+                     update_cache: bool = True):
+    """Single-token decode.
+
+    x: (B,1,d); cache k/v: (B,S,n_kv,hd); cache_len: (B,) current lengths
+    (the new token is written at index ``cache_len`` when it fits).
+    Returns (out (B,1,d), new_cache).
+
+    For the assigned ``decode_*`` shape cells the cache is *full*
+    (KV of seq_len, cache_len == S): the new K/V then contributes via a
+    one-step sliding update at the last slot.
+    """
+    B, _, _ = x.shape
+    S = cache.k.shape[1]
+    from repro.parallel.sharding import constrain_batch_only
+    q = _split_heads(x @ params["wq"], n_heads, head_dim)      # (B,1,H,hd)
+    k_new = _split_heads(x @ params["wk"], n_kv, head_dim)     # (B,1,kv,hd)
+    v_new = _split_heads(x @ params["wv"], n_kv, head_dim)
+    if rope_theta:
+        pos = cache_len[:, None]                                # (B,1)
+        q = apply_rope(q, pos, rope_theta)
+        k_new = apply_rope(k_new, pos, rope_theta)
+    # single-token tensors stay model-replicated so the (huge) KV cache
+    # keeps its sequence-parallel sharding end to end
+    q = constrain_batch_only(q)
+    k_new = constrain_batch_only(k_new)
+    v_new = constrain_batch_only(v_new)
+
+    if update_cache:
+        idx = jnp.minimum(cache_len, S - 1)                     # (B,)
+        from repro.parallel import meshctx as _mc
+        if _mc.opt_enabled("scatter_cache"):
+            rows = jnp.arange(B)
+            k = cache.k.at[rows, idx].set(k_new[:, 0].astype(cache.k.dtype))
+            v = cache.v.at[rows, idx].set(v_new[:, 0].astype(cache.v.dtype))
+        else:
+            onehot = jax.nn.one_hot(idx, S, dtype=cache.k.dtype)    # (B,S)
+            k = cache.k * (1 - onehot)[..., None, None] + onehot[..., None, None] * k_new
+            v = cache.v * (1 - onehot)[..., None, None] + onehot[..., None, None] * v_new
+    else:
+        k, v = cache.k, cache.v
+
+    from repro.parallel.sharding import constrain_kv_seq
+    kf = constrain_kv_seq(_repeat_kv(k, n_heads))               # (B,S,H,hd)
+    vf = constrain_kv_seq(_repeat_kv(v, n_heads))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kf).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(head_dim))
+    valid = (jnp.arange(S)[None, :] <= jnp.minimum(cache_len, S - 1)[:, None])
+    scores = jnp.where(valid[:, None, None, :], scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    out = out.reshape(B, 1, n_heads * head_dim) @ params["wo"]
+    return out, KVCache(k, v)
+
+
+def prefill_kv(params, x, *, n_kv, head_dim, rope_theta, positions=None):
+    """Compute the cache entries for a full prompt (used by prefill_step)."""
+    B, S, _ = x.shape
+    k = _split_heads(x @ params["wk"], n_kv, head_dim)
+    v = _split_heads(x @ params["wv"], n_kv, head_dim)
+    if rope_theta:
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        k = apply_rope(k, positions, rope_theta)
+    return KVCache(k, v)

@@ -1,0 +1,269 @@
+"""Mamba-2 (SSD — state-space duality) block.
+
+Used by ``mamba2-370m`` (d_state=128) and for Jamba's Mamba layers
+(d_state=16; see DESIGN.md §2 assumption log).
+
+The chunked SSD forward follows the Mamba-2 paper's minimal listing;
+``repro.kernels.ssd`` provides the Pallas intra-chunk kernel and
+``ssd_naive`` here is the exact sequential oracle used by tests and by
+the single-token decode step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from .layers import dense_init
+
+
+class SSMState(NamedTuple):
+    conv: jnp.ndarray     # (B, d_conv-1, d_xBC)   rolling conv window
+    ssd: jnp.ndarray      # (B, H, P, N)           recurrent state
+
+
+def mamba2_init(key, d_model, ssm: SSMConfig, dtype):
+    di = ssm.expand * d_model
+    nh = di // ssm.head_dim
+    d_xBC = di + 2 * ssm.n_groups * ssm.d_state
+    ks = jax.random.split(key, 6)
+    dt = jnp.exp(jax.random.uniform(ks[3], (nh,), jnp.float32)
+                 * (jnp.log(ssm.dt_max) - jnp.log(ssm.dt_min)) + jnp.log(ssm.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))   # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * di + 2 * ssm.n_groups * ssm.d_state + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (ssm.d_conv, d_xBC), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_xBC,), dtype),
+        "out_proj": dense_init(ks[2], di, d_model, dtype),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def segsum(x):
+    """x: (..., T) -> (..., T, T); out[..., i, j] = sum_{k=j+1..i} x[k], -inf above diag."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    keep = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(keep, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk, initial_state=None, use_kernel=False):
+    """Chunked SSD scan.
+
+    x:  (b, l, h, p)   inputs per head
+    dt: (b, l, h)      positive step sizes (post-softplus)
+    A:  (h,)           negative decay rates
+    Bm, Cm: (b, l, g, n) with g==1 (broadcast over heads)
+    Returns y: (b, l, h, p), final_state: (b, h, p, n)
+    """
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    # broadcast groups to heads
+    Bh = jnp.broadcast_to(Bm, (b, l, 1, n)) if Bm.shape[2] == 1 else Bm
+    Ch = jnp.broadcast_to(Cm, (b, l, 1, n)) if Cm.shape[2] == 1 else Cm
+    Bh = jnp.repeat(Bh, h // Bh.shape[2], axis=2)
+    Ch = jnp.repeat(Ch, h // Ch.shape[2], axis=2)
+
+    # operands stay in the model dtype (bf16 on pods) — fp32 only inside
+    # the (checkpointed, recomputed) per-chunk math; halves the resident
+    # SSD activations at 4k-train scale
+    xd = (x * dt[..., None].astype(x.dtype))
+    dA = (dt * A[None, None, :]).astype(jnp.float32)               # (b,l,h) negative
+
+    # chunk views
+    xc = xd.reshape(b, nc, chunk, h, p)
+    Bc = Bh.reshape(b, nc, chunk, h, n)
+    Cc = Ch.reshape(b, nc, chunk, h, n)
+    Ac = dA.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)         # (b,h,nc,chunk)
+    A_cumsum = jnp.cumsum(Ac, axis=-1)                             # (b,h,nc,chunk)
+
+    if use_kernel:
+        from repro.kernels import ssd_ops
+        Y_diag, states = ssd_ops.ssd_intra_chunk(
+            xc.astype(jnp.float32), Bc.astype(jnp.float32),
+            Cc.astype(jnp.float32), Ac, A_cumsum)
+    elif nc >= 16:
+        # long sequences: scan over chunks so only one (c,c) semiseparable
+        # mask is live at a time (O(nc·c²) -> O(c²) memory); checkpointed so
+        # the backward also recomputes per chunk instead of saving every
+        # chunk's (c,c,h) score tensor (8 GiB/layer for Jamba at 4k train)
+        @jax.checkpoint
+        def intra(args):
+            xi, Bi, Ci, Ai, Aci = args                             # per-chunk
+            xi = xi.astype(jnp.float32)
+            Bi = Bi.astype(jnp.float32)
+            Ci = Ci.astype(jnp.float32)
+            Li = jnp.exp(segsum(Ai))                               # (b,h,c,c)
+            Yi = jnp.einsum("blhn,bshn,bhls,bshp->blhp", Ci, Bi, Li, xi)
+            dec = jnp.exp(Aci[:, :, -1:] - Aci)                    # (b,h,c)
+            Si = jnp.einsum("blhn,bhl,blhp->bhpn", Bi, dec, xi)
+            return Yi, Si
+
+        args = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(Bc, 1, 0),
+                jnp.moveaxis(Cc, 1, 0), jnp.moveaxis(Ac, 2, 0),
+                jnp.moveaxis(A_cumsum, 2, 0))
+        Y_diag, states = jax.lax.map(intra, args)
+        Y_diag = jnp.moveaxis(Y_diag, 0, 1)                        # (b,nc,c,h,p)
+        states = jnp.moveaxis(states, 0, 1)                        # (b,nc,h,p,n)
+    else:
+        xf = xc.astype(jnp.float32)
+        Bf = Bc.astype(jnp.float32)
+        Cf = Cc.astype(jnp.float32)
+        L = jnp.exp(segsum(Ac))                                    # (b,h,nc,c,c)
+        Y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", Cf, Bf, L, xf)
+        decay_states = jnp.exp(A_cumsum[:, :, :, -1:] - A_cumsum)  # (b,h,nc,c)
+        states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", Bf, decay_states, xf)
+
+    # inter-chunk recurrence
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+    states = jnp.concatenate([initial_state[:, None], states], axis=1)  # (b,nc+1,h,p,n)
+    chunk_decay = A_cumsum[:, :, :, -1]                                 # (b,h,nc)
+    pad = jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(segsum(pad))                                  # (b,h,nc+1,nc+1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    prev_states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    state_decay_out = jnp.exp(A_cumsum)                                 # (b,h,nc,c)
+    Y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Cc.astype(jnp.float32),
+                       prev_states, state_decay_out)
+    y = (Y_diag + Y_off).reshape(b, l, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_naive(x, dt, A, Bm, Cm, initial_state=None):
+    """Exact sequential recurrence oracle: S_t = S exp(dt A) + dt x B^T."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    Bh = jnp.repeat(Bm, h // Bm.shape[2], axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, h // Cm.shape[2], axis=2).astype(jnp.float32)
+    S0 = initial_state if initial_state is not None else jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(S, t):
+        xt, dtt, Bt, Ct = x[:, t].astype(jnp.float32), dt[:, t], Bh[:, t], Ch[:, t]
+        decay = jnp.exp(dtt * A[None, :])[..., None, None]          # (b,h,1,1)
+        S = S * decay + jnp.einsum("bhp,bhn->bhpn", xt * dtt[..., None], Bt)
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, S)
+        return S, y
+
+    S, ys = jax.lax.scan(step, S0, jnp.arange(l))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), S
+
+
+def ssd_decode_step(state, xt, dtt, A, Bt, Ct):
+    """One-token recurrence. state: (b,h,p,n); xt: (b,h,p); dtt: (b,h)."""
+    decay = jnp.exp(dtt * A[None, :])[..., None, None]
+    state = state * decay + jnp.einsum("bhp,bhn->bhpn",
+                                       xt.astype(jnp.float32) * dtt[..., None],
+                                       Bt.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", Ct.astype(jnp.float32), state)
+    return state, y.astype(xt.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,L,D); w: (K,D)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def mamba2_block(params, x, ssm: SSMConfig, d_model, use_kernel=False):
+    """Full-sequence forward. x: (B,L,d) -> (B,L,d)."""
+    B_, L, _ = x.shape
+    di = ssm.expand * d_model
+    nh = di // ssm.head_dim
+    g, n = ssm.n_groups, ssm.d_state
+
+    zxbcdt = x @ params["in_proj"]
+    z, xBC, dt = jnp.split(zxbcdt, [di, di + di + 2 * g * n], axis=-1)
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"], params["conv_b"]))
+    xs, Bm, Cm = jnp.split(xBC, [di, di + g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])     # (B,L,nh)
+    A = -jnp.exp(params["A_log"])                                        # (nh,)
+
+    xh = xs.reshape(B_, L, nh, ssm.head_dim)
+    Bm = Bm.reshape(B_, L, g, n)
+    Cm = Cm.reshape(B_, L, g, n)
+    chunk = min(ssm.chunk_size, L)
+    if L % chunk:
+        chunk = 1  # degenerate fallback for odd lengths
+    y, _ = ssd_chunked(xh, dt, A, Bm, Cm, chunk, use_kernel=use_kernel)
+    y = y + params["D"][None, None, :, None] * xh                        # skip
+    y = (y.reshape(B_, L, di) * jax.nn.silu(z)).astype(x.dtype)
+    return y @ params["out_proj"]
+
+
+def mamba2_prefill(params, x, ssm: SSMConfig, d_model):
+    """Full forward also returning the final SSMState for decode."""
+    B_, L, _ = x.shape
+    di = ssm.expand * d_model
+    nh = di // ssm.head_dim
+    g, n = ssm.n_groups, ssm.d_state
+    zxbcdt = x @ params["in_proj"]
+    z, xBC_raw, dt = jnp.split(zxbcdt, [di, di + di + 2 * g * n], axis=-1)
+    xBC = jax.nn.silu(_causal_conv(xBC_raw, params["conv_w"], params["conv_b"]))
+    xs, Bm, Cm = jnp.split(xBC, [di, di + g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(B_, L, nh, ssm.head_dim)
+    chunk = min(ssm.chunk_size, L)
+    if L % chunk:
+        chunk = 1
+    y, final = ssd_chunked(xh, dt, A, Bm.reshape(B_, L, g, n), Cm.reshape(B_, L, g, n), chunk)
+    y = y + params["D"][None, None, :, None] * xh
+    y = (y.reshape(B_, L, di) * jax.nn.silu(z)).astype(x.dtype)
+    K = params["conv_w"].shape[0]
+    conv_state = xBC_raw[:, -(K - 1):, :] if L >= K - 1 else jnp.pad(
+        xBC_raw, ((0, 0), (K - 1 - L, 0), (0, 0)))
+    return y @ params["out_proj"], SSMState(conv_state, final)
+
+
+def mamba2_decode(params, x, state: SSMState, ssm: SSMConfig, d_model):
+    """One-token decode. x: (B,1,d) -> (B,1,d), new state."""
+    B_ = x.shape[0]
+    di = ssm.expand * d_model
+    nh = di // ssm.head_dim
+    g, n = ssm.n_groups, ssm.d_state
+    zxbcdt = x[:, 0] @ params["in_proj"]                                 # (B, ·)
+    z, xBC_raw, dt = jnp.split(zxbcdt, [di, di + di + 2 * g * n], axis=-1)
+    # rolling conv window
+    window = jnp.concatenate([state.conv, xBC_raw[:, None]], axis=1)     # (B,K,D)
+    w = params["conv_w"]
+    xBC = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, w) + params["conv_b"])
+    new_conv = window[:, 1:]
+    xs, Bm, Cm = jnp.split(xBC, [di, di + g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])     # (B,nh)
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(B_, nh, ssm.head_dim)
+    Bm = jnp.repeat(Bm.reshape(B_, g, n), nh // g, axis=1)
+    Cm = jnp.repeat(Cm.reshape(B_, g, n), nh // g, axis=1)
+    new_ssd, y = ssd_decode_step(state.ssd, xh, dt, A, Bm, Cm)
+    y = y + params["D"][None, :, None] * xh
+    y = (y.reshape(B_, di) * jax.nn.silu(z)).astype(x.dtype) @ params["out_proj"]
+    return y[:, None], SSMState(new_conv, new_ssd)
+
+
+def init_ssm_state(batch, d_model, ssm: SSMConfig, dtype):
+    di = ssm.expand * d_model
+    nh = di // ssm.head_dim
+    d_xBC = di + 2 * ssm.n_groups * ssm.d_state
+    return SSMState(
+        conv=jnp.zeros((batch, ssm.d_conv - 1, d_xBC), dtype),
+        ssd=jnp.zeros((batch, nh, ssm.head_dim, ssm.d_state), jnp.float32),
+    )

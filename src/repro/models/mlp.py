@@ -1,0 +1,26 @@
+"""Dense FFN blocks: SwiGLU, squared-ReLU, GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, activation_fn
+
+
+def ffn_init(key, d_model, d_ff, activation, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[1], d_ff, d_model, dtype),
+    }
+    if activation == "swiglu":
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def ffn(params, x, activation):
+    if activation == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = activation_fn(activation)(x @ params["w_up"])
+    return h @ params["w_down"]

@@ -1,0 +1,219 @@
+"""MoE FFN block.
+
+Weight layout (stacked over experts — shardable on any axis):
+  w_gate, w_up : (E, d_model, d_expert)       (w_gate only for swiglu)
+  w_down       : (E, d_expert, d_model)
+
+Execution paths (``impl``):
+  dense     — every expert on every token, masked combine (oracle; tests)
+  capacity  — Switch-style capacity dispatch (efficient single-device XLA)
+  fse_dp    — the paper's expert streaming (repro.core.fse_dp, shard_map)
+  ep / tp   — baselines (repro.core.baselines)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.core import gating
+from .layers import dense_init
+from .mlp import ffn_init, ffn
+
+
+def moe_init(key, d_model, moe: MoEConfig, activation, dtype):
+    ks = jax.random.split(key, 5)
+    E, de = moe.num_experts, moe.d_expert
+    p = {
+        "router": gating.router_init(ks[0], d_model, E, dtype),
+        "w_up": _stack_init(ks[1], E, d_model, de, dtype),
+        "w_down": _stack_init(ks[2], E, de, d_model, dtype),
+    }
+    if activation == "swiglu":
+        p["w_gate"] = _stack_init(ks[3], E, d_model, de, dtype)
+    if moe.num_shared_experts:
+        p["shared"] = ffn_init(ks[4], d_model, de * moe.num_shared_experts, activation, dtype)
+    return p
+
+
+def _stack_init(key, E, d_in, d_out, dtype):
+    ks = jax.random.split(key, E)
+    return jnp.stack([dense_init(k, d_in, d_out, dtype) for k in ks])
+
+
+def _expert_act(params, xe, activation):
+    """xe: (..., E-batched leading dims with x (..., d)) applied per expert.
+
+    params w_*: (E, d, de). xe: (E, C, d) -> (E, C, d).
+    """
+    if activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])) \
+            * jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    else:
+        from .layers import activation_fn
+        h = activation_fn(activation)(jnp.einsum("ecd,edf->ecf", xe, params["w_up"]))
+    return jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# dense oracle — O(T·E) compute, exact
+# ---------------------------------------------------------------------------
+
+def moe_dense(params, x2d, routing, activation):
+    """x2d: (T,d); returns (T,d). Computes all experts, weighted combine."""
+    T, d = x2d.shape
+    E = params["w_up"].shape[0]
+    xe = jnp.broadcast_to(x2d[None], (E, T, d))
+    ye = _expert_act(params, xe, activation)          # (E,T,d)
+    return jnp.einsum("te,etd->td", routing.combine, ye)
+
+
+# ---------------------------------------------------------------------------
+# capacity dispatch — Switch-style, efficient on one device
+# ---------------------------------------------------------------------------
+
+def capacity_of(T, moe: MoEConfig):
+    import math
+    c = math.ceil(T * moe.top_k / moe.num_experts * moe.capacity_factor)
+    return max(c, 1)
+
+
+def dispatch_masks(routing, T, E, C):
+    """Build (T,E,C) dispatch one-hot + (T,E,C) combine weights.
+
+    Tokens beyond an expert's capacity C are dropped (standard EP
+    baseline semantics — the paper's EP baseline also has finite
+    per-die buffering).
+    """
+    onehot = jax.nn.one_hot(routing.indices, E, dtype=jnp.int32).sum(1)   # (T,E) 0/1
+    pos = jnp.cumsum(onehot, axis=0) * onehot - 1                          # position in expert queue
+    keep = (pos >= 0) & (pos < C)
+    pos = jnp.clip(pos, 0, C - 1)
+    dispatch = jax.nn.one_hot(pos, C) * keep[..., None]                    # (T,E,C)
+    combine = dispatch * routing.combine[..., None]                        # (T,E,C)
+    return dispatch, combine
+
+
+def moe_capacity(params, x2d, routing, moe: MoEConfig, activation):
+    T, d = x2d.shape
+    E = moe.num_experts
+    C = capacity_of(T, moe)
+    if sorted_dispatch_enabled():
+        idx, wts = dispatch_tables(routing, T, E, C)
+        xe = gather_dispatch(x2d, idx)                                     # (E,C,d)
+        ye = _expert_act(params, xe, activation)
+        return scatter_combine(ye, idx, wts, T)
+    dispatch, combine = dispatch_masks(routing, T, E, C)
+    xe = jnp.einsum("tec,td->ecd", dispatch.astype(x2d.dtype), x2d)        # (E,C,d)
+    ye = _expert_act(params, xe, activation)                               # (E,C,d)
+    return jnp.einsum("tec,ecd->td", combine.astype(x2d.dtype), ye)
+
+
+# ---------------------------------------------------------------------------
+# sorted dispatch — gather/scatter instead of one-hot einsums
+#
+# The one-hot dispatch/combine einsums cost O(T·E·C·d) MXU flops (3-4x the
+# useful expert GEMMs for fine-grained MoEs); sorting token-choices by
+# expert and using gather/scatter moves the same data with zero matmul
+# flops.  Enabled via ``use_sorted_dispatch`` (a §Perf hillclimb knob; the
+# one-hot path stays as the paper-faithful capacity baseline + oracle).
+# ---------------------------------------------------------------------------
+
+import contextlib
+import contextvars
+
+_SORTED = contextvars.ContextVar("repro_sorted_dispatch", default=False)
+
+
+@contextlib.contextmanager
+def use_sorted_dispatch(enabled: bool = True):
+    tok = _SORTED.set(enabled)
+    try:
+        yield
+    finally:
+        _SORTED.reset(tok)
+
+
+def sorted_dispatch_enabled() -> bool:
+    from repro.parallel import meshctx
+    return _SORTED.get() or meshctx.opt_enabled("sorted")
+
+
+def dispatch_tables(routing, T, E, C):
+    """(idx (E,C) int32 token ids [T = padding sentinel], wts (E,C))."""
+    k = routing.indices.shape[1]
+    e_flat = routing.indices.reshape(-1)                       # (T*k,)
+    t_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    w_flat = routing.weights.reshape(-1)
+    order = jnp.argsort(e_flat, stable=True)
+    e_s, t_s, w_s = e_flat[order], t_flat[order], w_flat[order]
+    # position within the expert group (first occurrence offsets)
+    start = jnp.searchsorted(e_s, e_s, side="left")
+    pos = jnp.arange(T * k, dtype=jnp.int32) - start.astype(jnp.int32)
+    # overflow entries keep pos >= C and fall out via mode="drop" (clipping
+    # them would clobber the legitimate occupant of slot C-1)
+    idx = jnp.full((E, C), T, jnp.int32)
+    idx = idx.at[e_s, pos].set(t_s, mode="drop")
+    wts = jnp.zeros((E, C), w_s.dtype)
+    wts = wts.at[e_s, pos].set(w_s, mode="drop")
+    return idx, wts
+
+
+def gather_dispatch(x2d, idx):
+    """x2d: (T,d); idx: (E,C) -> (E,C,d) with zero rows for padding."""
+    xpad = jnp.concatenate([x2d, jnp.zeros((1, x2d.shape[1]), x2d.dtype)])
+    return xpad[idx]
+
+
+def scatter_combine(ye, idx, wts, T):
+    """ye: (E,C,d) -> (T,d) weighted scatter-add."""
+    d = ye.shape[-1]
+    contrib = (ye.astype(jnp.float32) * wts[..., None].astype(jnp.float32))
+    y = jnp.zeros((T + 1, d), jnp.float32)
+    y = y.at[idx.reshape(-1)].add(contrib.reshape(-1, d), mode="drop")
+    return y[:T]
+
+
+# ---------------------------------------------------------------------------
+# block entry point
+# ---------------------------------------------------------------------------
+
+def moe_block(params, x, moe: MoEConfig, activation, *, impl=None,
+              mesh_axis="model", return_aux=False):
+    """x: (B,S,d); routes and executes the configured impl.
+
+    Distributed impls (fse_dp / ep / tp) route *inside* shard_map on
+    local tokens and return a pmean'd aux loss; single-device impls
+    route globally.
+    """
+    impl = impl or moe.impl
+    shape = x.shape
+    if x.ndim == 2:
+        x = x[None]
+    routing = None
+    if impl == "fse_dp":
+        from repro.core import fse_dp
+        y, aux = fse_dp.fse_dp_moe_3d(params, x, moe, activation, axis=mesh_axis)
+    elif impl == "ep":
+        from repro.core import baselines
+        y, aux = baselines.ep_moe_3d(params, x, moe, activation, axis=mesh_axis)
+    elif impl == "tp":
+        from repro.core import baselines
+        y, aux = baselines.tp_moe_3d(params, x, moe, activation, axis=mesh_axis)
+    elif impl in ("dense", "capacity"):
+        x2d = x.reshape(-1, shape[-1])
+        routing = gating.route(params["router"], x2d, top_k=moe.top_k)
+        if impl == "dense":
+            y = moe_dense(params, x2d, routing, activation)
+        else:
+            y = moe_capacity(params, x2d, routing, moe, activation)
+        y = y.reshape(x.shape)
+        aux = gating.aux_load_balance_loss(routing, moe.num_experts)
+    else:
+        raise ValueError(f"unknown moe impl {impl!r}")
+    if moe.num_shared_experts:
+        y = y + ffn(params["shared"], x, activation)
+    y = y.reshape(shape)
+    if return_aux:
+        return y, aux, routing
+    return y

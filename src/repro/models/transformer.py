@@ -1,0 +1,304 @@
+"""Decoder-only LM assembly (dense / MoE / SSM / hybrid / VLM-prefix).
+
+Layers are grouped into the smallest repeating *period* of identical
+structure (1 for homogeneous stacks; 8 for Jamba's 1:7 attn:ssm
+interleave with MoE every 2nd layer) and scanned over periods with
+slot-wise stacked parameters.  This keeps the lowered HLO size
+O(period) instead of O(num_layers) — essential for the 96-layer
+nemotron-4-340b dry-run — while supporting heterogeneous layer plans.
+
+Caches (KV / SSM state) are carried through the same scan as per-period
+xs/ys so decode works for every family.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import attention as attn_mod
+from . import mamba2 as ssm_mod
+from . import moe as moe_mod
+from .layers import embed_init, norm_init, apply_norm
+from .mlp import ffn_init, ffn
+
+
+# ---------------------------------------------------------------------------
+# layer plan
+# ---------------------------------------------------------------------------
+
+def period_plan(cfg: ModelConfig):
+    """Smallest p dividing num_layers with kinds[i] == kinds[i mod p]."""
+    kinds = list(zip(cfg.layer_kinds(), cfg.ffn_kinds()))
+    L = cfg.num_layers
+    for p in range(1, L + 1):
+        if L % p == 0 and all(kinds[i] == kinds[i % p] for i in range(L)):
+            return p, kinds[:p]
+    return L, kinds
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _slot_init(key, cfg: ModelConfig, mixer: str, ffn_kind: str):
+    ks = jax.random.split(key, 4)
+    slot: dict = {"norm1": norm_init(cfg.norm, cfg.d_model)}
+    if mixer == "attn":
+        slot["attn"] = attn_mod.attn_init(
+            ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.resolved_head_dim, jnp.dtype(cfg.dtype))
+    else:
+        slot["ssm"] = ssm_mod.mamba2_init(ks[0], cfg.d_model, cfg.ssm, jnp.dtype(cfg.dtype))
+    if ffn_kind != "none":
+        slot["norm2"] = norm_init(cfg.norm, cfg.d_model)
+        if ffn_kind == "moe":
+            slot["moe"] = moe_mod.moe_init(ks[1], cfg.d_model, cfg.moe,
+                                           cfg.activation, jnp.dtype(cfg.dtype))
+        else:
+            slot["ffn"] = ffn_init(ks[1], cfg.d_model, cfg.d_ff,
+                                   cfg.activation, jnp.dtype(cfg.dtype))
+    return slot
+
+
+def init_lm(key, cfg: ModelConfig):
+    p, plan = period_plan(cfg)
+    n_periods = cfg.num_layers // p
+    ks = jax.random.split(key, n_periods * p + 3)
+    dtype = jnp.dtype(cfg.dtype)
+    periods = []
+    for s, (mixer, ffn_kind) in enumerate(plan):
+        per = [_slot_init(ks[c * p + s], cfg, mixer, ffn_kind) for c in range(n_periods)]
+        periods.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+    params = {
+        "embed": embed_init(ks[-1], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": norm_init(cfg.norm, cfg.d_model),
+        "periods": tuple(periods),
+    }
+    if not cfg.tie_embeddings:
+        from .layers import dense_init
+        params["lm_head"] = dense_init(ks[-2], cfg.d_model, cfg.vocab_size, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# slot application
+# ---------------------------------------------------------------------------
+
+def _apply_slot_full(slot, x, cfg: ModelConfig, mixer, ffn_kind, *,
+                     positions=None, moe_impl=None, use_flash=False):
+    """Full-sequence forward for one layer slot. Returns (x, aux)."""
+    h = apply_norm(cfg.norm, slot["norm1"], x)
+    if mixer == "attn":
+        h = attn_mod.attention(slot["attn"], h, n_heads=cfg.num_heads,
+                               n_kv=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+                               rope_theta=cfg.rope_theta, positions=positions,
+                               use_flash=use_flash)
+    else:
+        h = ssm_mod.mamba2_block(slot["ssm"], h, cfg.ssm, cfg.d_model)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if ffn_kind != "none":
+        h = apply_norm(cfg.norm, slot["norm2"], x)
+        if ffn_kind == "moe":
+            h, aux, _ = moe_mod.moe_block(slot["moe"], h, cfg.moe, cfg.activation,
+                                          impl=moe_impl, return_aux=True)
+        else:
+            h = ffn(slot["ffn"], h, cfg.activation)
+        x = x + h
+    return x, aux
+
+
+class SlotCache(NamedTuple):
+    """Per-slot decode cache — exactly one of kv / ssm is meaningful."""
+    kv: Any
+    ssm: Any
+
+
+def _apply_slot_decode(slot, x, cache: SlotCache, cache_len, cfg: ModelConfig,
+                       mixer, ffn_kind, *, moe_impl=None):
+    h = apply_norm(cfg.norm, slot["norm1"], x)
+    if mixer == "attn":
+        h, new_kv = attn_mod.attention_decode(
+            slot["attn"], h, cache.kv, cache_len, n_heads=cfg.num_heads,
+            n_kv=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            rope_theta=cfg.rope_theta)
+        new_cache = SlotCache(new_kv, cache.ssm)
+    else:
+        h, new_state = ssm_mod.mamba2_decode(slot["ssm"], h, cache.ssm, cfg.ssm, cfg.d_model)
+        new_cache = SlotCache(cache.kv, new_state)
+    x = x + h
+    if ffn_kind != "none":
+        h = apply_norm(cfg.norm, slot["norm2"], x)
+        if ffn_kind == "moe":
+            h = moe_mod.moe_block(slot["moe"], h, cfg.moe, cfg.activation, impl=moe_impl)
+        else:
+            h = ffn(slot["ffn"], h, cfg.activation)
+        x = x + h
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# forward (train / scoring)
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg, prefix_embeds=None):
+    x = params["embed"][tokens]                      # (B,S,d) gather
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _unembed(params, x, cfg):
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    return x @ head
+
+
+def forward(params, tokens, cfg: ModelConfig, *, prefix_embeds=None,
+            moe_impl=None, use_flash=False, remat=False, unshard=False,
+            return_hidden=False):
+    """tokens: (B,S) -> (logits (B,S_total,V), aux_loss scalar).
+
+    ``unshard``: apply the per-layer ZeRO-3 gather constraint inside the
+    scan body (FSDP layouts).  ``return_hidden``: skip the unembedding
+    (the fused-CE loss path consumes hidden states chunk-wise).
+    """
+    p, plan = period_plan(cfg)
+    x = _embed(params, tokens, cfg, prefix_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    # SP residual stream pays off for attention-only stacks; an SSM layer's
+    # sequential inter-chunk recurrence would regather the full sequence
+    # every layer, so hybrid/ssm families keep the batch-sharded stream
+    use_sp = not any(m == "ssm" for m, _ in plan)
+
+    def period_body(carry, period_params):
+        x, aux = carry
+        from repro.parallel.sharding import constrain_seq_sharded, unshard_slot_params
+        if use_sp:
+            x = constrain_seq_sharded(x)
+        if unshard:
+            period_params = tuple(unshard_slot_params(s) for s in period_params)
+        for s, (mixer, ffn_kind) in enumerate(plan):
+            x, a = _apply_slot_full(period_params[s], x, cfg, mixer, ffn_kind,
+                                    positions=positions, moe_impl=moe_impl,
+                                    use_flash=use_flash)
+            aux = aux + a
+        if use_sp:
+            x = constrain_seq_sharded(x)   # pin the saved carry to SP layout
+        return (x, aux), None
+
+    body = period_body
+    if remat:
+        body = jax.checkpoint(period_body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["periods"])
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    if return_hidden:
+        return x, aux
+    return _unembed(params, x, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int):
+    """Stacked per-period SlotCache tuple matching the scan layout."""
+    p, plan = period_plan(cfg)
+    n_periods = cfg.num_layers // p
+    dtype = jnp.dtype(cfg.dtype)
+    caches = []
+    for mixer, _ in plan:
+        if mixer == "attn":
+            kv = attn_mod.init_kv_cache(batch, max_seq, cfg.num_kv_heads,
+                                        cfg.resolved_head_dim, dtype)
+            kv = jax.tree.map(lambda a: jnp.broadcast_to(a, (n_periods,) + a.shape), kv)
+            caches.append(SlotCache(kv, ()))
+        else:
+            st = ssm_mod.init_ssm_state(batch, cfg.d_model, cfg.ssm, dtype)
+            st = jax.tree.map(lambda a: jnp.broadcast_to(a, (n_periods,) + a.shape), st)
+            caches.append(SlotCache((), st))
+    return tuple(caches)
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_seq: int, *,
+            prefix_embeds=None, moe_impl=None):
+    """Run the prompt, returning (logits, caches filled up to S)."""
+    p, plan = period_plan(cfg)
+    x = _embed(params, tokens, cfg, prefix_embeds)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    use_sp = not any(m == "ssm" for m, _ in plan)
+
+    def period_body(x, period_in):
+        from repro.parallel.sharding import constrain_seq_sharded
+        if use_sp:
+            x = constrain_seq_sharded(x)
+        period_params = period_in
+        new_caches = []
+        for s, (mixer, ffn_kind) in enumerate(plan):
+            h = apply_norm(cfg.norm, period_params[s]["norm1"], x)
+            if mixer == "attn":
+                kv = attn_mod.prefill_kv(period_params[s]["attn"], h,
+                                         n_kv=cfg.num_kv_heads,
+                                         head_dim=cfg.resolved_head_dim,
+                                         rope_theta=cfg.rope_theta, positions=positions)
+                # pad cache to max_seq
+                pad = max_seq - S
+                kv = attn_mod.KVCache(
+                    jnp.pad(kv.k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                    jnp.pad(kv.v, ((0, 0), (0, pad), (0, 0), (0, 0))))
+                h = attn_mod.attention(period_params[s]["attn"], h,
+                                       n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                                       head_dim=cfg.resolved_head_dim,
+                                       rope_theta=cfg.rope_theta, positions=positions)
+                new_caches.append(SlotCache(kv, ()))
+            else:
+                h, st = ssm_mod.mamba2_prefill(period_params[s]["ssm"], h, cfg.ssm, cfg.d_model)
+                new_caches.append(SlotCache((), st))
+            x = x + h
+            if ffn_kind != "none":
+                h = apply_norm(cfg.norm, period_params[s]["norm2"], x)
+                if ffn_kind == "moe":
+                    h = moe_mod.moe_block(period_params[s]["moe"], h, cfg.moe,
+                                          cfg.activation, impl=moe_impl)
+                else:
+                    h = ffn(period_params[s]["ffn"], h, cfg.activation)
+                x = x + h
+        return x, tuple(new_caches)
+
+    x, caches = jax.lax.scan(period_body, x, params["periods"])
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    return _unembed(params, x, cfg), caches
+
+
+def decode_step(params, token, caches, cache_len, cfg: ModelConfig, *,
+                moe_impl=None, unshard=False):
+    """token: (B,1) int32; caches from init_caches/prefill; cache_len: (B,).
+
+    Returns (logits (B,1,V), new caches).
+    """
+    p, plan = period_plan(cfg)
+    x = _embed(params, token, cfg)
+
+    def period_body(x, period_in):
+        period_params, period_caches = period_in
+        if unshard:
+            from repro.parallel.sharding import unshard_slot_params
+            period_params = tuple(unshard_slot_params(s) for s in period_params)
+        new_caches = []
+        for s, (mixer, ffn_kind) in enumerate(plan):
+            x, nc = _apply_slot_decode(period_params[s], x, period_caches[s],
+                                       cache_len, cfg, mixer, ffn_kind,
+                                       moe_impl=moe_impl)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(period_body, x, (params["periods"], caches))
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    return _unembed(params, x, cfg), new_caches

@@ -1,0 +1,171 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed).
+
+``input_specs`` supplies precomputed frame embeddings (B, F, d) — the
+conv1d×2 mel frontend is a stub per the assignment.  Encoder layers are
+bidirectional self-attn + GELU FFN; decoder layers add causal self-attn
+with KV cache and cross-attention over the encoder memory.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import attention as attn_mod
+from .layers import embed_init, norm_init, apply_norm, sinusoidal_positions
+from .mlp import ffn_init, ffn
+
+
+def _enc_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": norm_init(cfg.norm, cfg.d_model),
+        "attn": attn_mod.attn_init(ks[0], cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.resolved_head_dim, dtype),
+        "norm2": norm_init(cfg.norm, cfg.d_model),
+        "ffn": ffn_init(ks[1], cfg.d_model, cfg.d_ff, cfg.activation, dtype),
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": norm_init(cfg.norm, cfg.d_model),
+        "self_attn": attn_mod.attn_init(ks[0], cfg.d_model, cfg.num_heads,
+                                        cfg.num_kv_heads, cfg.resolved_head_dim, dtype),
+        "norm_x": norm_init(cfg.norm, cfg.d_model),
+        "cross_attn": attn_mod.attn_init(ks[1], cfg.d_model, cfg.num_heads,
+                                         cfg.num_kv_heads, cfg.resolved_head_dim, dtype),
+        "norm2": norm_init(cfg.norm, cfg.d_model),
+        "ffn": ffn_init(ks[2], cfg.d_model, cfg.d_ff, cfg.activation, dtype),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, cfg.encoder_layers + cfg.num_layers + 2)
+    enc = [_enc_layer_init(ks[i], cfg, dtype) for i in range(cfg.encoder_layers)]
+    dec = [_dec_layer_init(ks[cfg.encoder_layers + i], cfg, dtype)
+           for i in range(cfg.num_layers)]
+    return {
+        "embed": embed_init(ks[-1], cfg.vocab_size, cfg.d_model, dtype),
+        "enc_layers": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "dec_layers": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "enc_norm": norm_init(cfg.norm, cfg.d_model),
+        "dec_norm": norm_init(cfg.norm, cfg.d_model),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig, remat: bool = False):
+    """frames: (B, F, d) precomputed embeddings -> encoder memory (B, F, d)."""
+    F = frames.shape[1]
+    x = frames + sinusoidal_positions(F, cfg.d_model).astype(frames.dtype)[None]
+
+    def body(x, lp):
+        h = apply_norm(cfg.norm, lp["norm1"], x)
+        h = attn_mod.attention(lp["attn"], h, n_heads=cfg.num_heads,
+                               n_kv=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+                               rope_theta=0.0, causal=False)
+        x = x + h
+        h = apply_norm(cfg.norm, lp["norm2"], x)
+        x = x + ffn(lp["ffn"], h, cfg.activation)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(cfg.norm, params["enc_norm"], x)
+
+
+def decode_train(params, tokens, memory, cfg: ModelConfig,
+                 remat: bool = False, return_hidden: bool = False):
+    """Teacher-forced decoder. tokens: (B,S); memory: (B,F,d) -> logits
+    (or final hidden states when ``return_hidden``)."""
+    S = tokens.shape[1]
+    x = params["embed"][tokens]
+    x = x + sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None]
+
+    def body(x, lp):
+        h = apply_norm(cfg.norm, lp["norm1"], x)
+        h = attn_mod.attention(lp["self_attn"], h, n_heads=cfg.num_heads,
+                               n_kv=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+                               rope_theta=0.0, causal=True)
+        x = x + h
+        h = apply_norm(cfg.norm, lp["norm_x"], x)
+        h = attn_mod.cross_attention(lp["cross_attn"], h, memory,
+                                     n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                                     head_dim=cfg.resolved_head_dim)
+        x = x + h
+        h = apply_norm(cfg.norm, lp["norm2"], x)
+        x = x + ffn(lp["ffn"], h, cfg.activation)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = apply_norm(cfg.norm, params["dec_norm"], x)
+    if return_hidden:
+        return x
+    return x @ params["embed"].T
+
+
+class EncDecCaches(NamedTuple):
+    self_kv: attn_mod.KVCache      # stacked (L, B, S, kv, hd)
+    cross_k: jnp.ndarray           # (L, B, F, kv, hd) precomputed from memory
+    cross_v: jnp.ndarray
+
+
+def init_decode_caches(params, memory, cfg: ModelConfig, batch, max_seq):
+    """Precompute cross-attn K/V from memory; empty self-attn cache."""
+    dtype = jnp.dtype(cfg.dtype)
+    kv = attn_mod.init_kv_cache(batch, max_seq, cfg.num_kv_heads,
+                                cfg.resolved_head_dim, dtype)
+    L = cfg.num_layers
+    kv = jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape), kv)
+
+    def per_layer(lp):
+        k = (memory @ lp["cross_attn"]["wk"]).reshape(
+            memory.shape[0], memory.shape[1], cfg.num_kv_heads, cfg.resolved_head_dim)
+        v = (memory @ lp["cross_attn"]["wv"]).reshape(
+            memory.shape[0], memory.shape[1], cfg.num_kv_heads, cfg.resolved_head_dim)
+        return k, v
+
+    ck, cv = jax.vmap(per_layer)(params["dec_layers"])
+    return EncDecCaches(kv, ck, cv)
+
+
+def decode_step(params, token, caches: EncDecCaches, cache_len, cfg: ModelConfig):
+    """token: (B,1) -> (logits (B,1,V), new caches)."""
+    B = token.shape[0]
+    x = params["embed"][token]
+    pos_table = sinusoidal_positions(caches.self_kv.k.shape[2], cfg.d_model)
+    x = x + pos_table[jnp.minimum(cache_len, pos_table.shape[0] - 1)][:, None].astype(x.dtype)
+
+    def body(x, layer_in):
+        lp, kv, ck, cv = layer_in
+        h = apply_norm(cfg.norm, lp["norm1"], x)
+        h, new_kv = attn_mod.attention_decode(
+            lp["self_attn"], h, kv, cache_len, n_heads=cfg.num_heads,
+            n_kv=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim, rope_theta=0.0)
+        x = x + h
+        # cross attention against precomputed K/V
+        h = apply_norm(cfg.norm, lp["norm_x"], x)
+        q = (h @ lp["cross_attn"]["wq"]).reshape(B, 1, cfg.num_heads, cfg.resolved_head_dim)
+        kf = attn_mod._repeat_kv(ck, cfg.num_heads)
+        vf = attn_mod._repeat_kv(cv, cfg.num_heads)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kf).astype(jnp.float32)
+        scores = scores / jnp.sqrt(jnp.float32(cfg.resolved_head_dim))
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", probs, vf).reshape(B, 1, -1)
+        x = x + o @ lp["cross_attn"]["wo"]
+        h = apply_norm(cfg.norm, lp["norm2"], x)
+        x = x + ffn(lp["ffn"], h, cfg.activation)
+        return x, new_kv
+
+    x, new_kv = jax.lax.scan(
+        body, x, (params["dec_layers"], caches.self_kv, caches.cross_k, caches.cross_v))
+    x = apply_norm(cfg.norm, params["dec_norm"], x)
+    logits = x @ params["embed"].T
+    return logits, EncDecCaches(new_kv, caches.cross_k, caches.cross_v)

@@ -1,0 +1,51 @@
+"""Int8 gradient compression with error feedback (cross-pod all-reduce).
+
+Beyond-paper distributed-optimization trick: quantize gradients to int8
+per-tensor-scale before the (slow, DCN-crossing) ``pod``-axis
+all-reduce, carrying the quantization residual into the next step
+(error feedback keeps SGD/Adam convergence unbiased in practice).
+
+The quantize/dequantize pair is exact enough that the trainer test
+asserts convergence parity within tolerance on a small model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g, *, bits: int = 8):
+    """g -> (q int8, scale). Symmetric per-tensor scaling."""
+    lim = 2.0 ** (bits - 1) - 1
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / lim
+    q = jnp.clip(jnp.round(gf / scale), -lim, lim).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, residual=None, *, bits: int = 8):
+    """Returns (decompressed grads, new residual). With error feedback:
+    q = Q(g + r);  r' = (g + r) - deQ(q)."""
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, s = quantize(corrected, bits=bits)
+        deq = dequantize(q, s)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    deq = jax.tree.unflatten(tdef, [p_[0] for p_ in pairs])
+    res = jax.tree.unflatten(tdef, [p_[1] for p_ in pairs])
+    return deq, res
+
+
+def compressed_bytes_ratio(bits: int = 8, dtype_bits: int = 32) -> float:
+    return bits / dtype_bits

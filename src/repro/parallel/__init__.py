@@ -1,0 +1,2 @@
+from . import meshctx, sharding
+from .meshctx import with_mesh, get_mesh

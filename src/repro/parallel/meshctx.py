@@ -1,0 +1,63 @@
+"""Mesh context — lets model code find the active mesh without jax globals.
+
+The launcher / trainer / tests wrap tracing in ``with_mesh(mesh)``; the
+distributed MoE implementations read it via ``get_mesh()`` and fall back
+to single-device execution when no mesh (or a trivial one) is active.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+
+_MESH: contextvars.ContextVar = contextvars.ContextVar("repro_mesh", default=None)
+
+
+@contextlib.contextmanager
+def with_mesh(mesh: Optional[jax.sharding.Mesh]):
+    tok = _MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH.reset(tok)
+
+
+def get_mesh() -> Optional[jax.sharding.Mesh]:
+    return _MESH.get()
+
+
+def model_axis_size(axis: str = "model") -> int:
+    mesh = get_mesh()
+    if mesh is None or axis not in mesh.axis_names:
+        return 1
+    return mesh.shape[axis]
+
+
+def batch_axes(mesh, axis: str = "model"):
+    """All mesh axes except the model axis (used for batch sharding specs)."""
+    return tuple(a for a in mesh.axis_names if a != axis)
+
+
+# ---------------------------------------------------------------------------
+# optimization flags (§Perf hillclimb knobs; default = paper-faithful baseline)
+# ---------------------------------------------------------------------------
+
+_OPTS: contextvars.ContextVar = contextvars.ContextVar("repro_opts", default=frozenset())
+
+
+@contextlib.contextmanager
+def with_opts(*names: str):
+    """Enable named optimizations: 'sorted' (sort-based MoE dispatch),
+    'sp_attn' (explicit SP all-gather at attention entry),
+    'scatter_cache' (scatter KV update instead of one-hot)."""
+    tok = _OPTS.set(frozenset(_OPTS.get()) | set(names))
+    try:
+        yield
+    finally:
+        _OPTS.reset(tok)
+
+
+def opt_enabled(name: str) -> bool:
+    return name in _OPTS.get()

@@ -1,0 +1,260 @@
+"""Sharding rules: map every parameter / cache / batch leaf to a
+PartitionSpec on the (pod, data, model) production mesh.
+
+Conventions (Megatron-TP + SP on ``model``; DP/FSDP on ``pod``+``data``):
+
+  embed (V,d)              -> (None, model)
+  lm_head (d,V)            -> (fsdp?, model)
+  attn wq/wk/wv (d, H*hd)  -> (fsdp?, model)        heads sharded
+  attn wo (H*hd, d)        -> (model, fsdp?)
+  ffn w_up/w_gate (d, f)   -> (fsdp?, model)
+  ffn w_down (f, d)        -> (model, fsdp?)
+  MoE w_gate/w_up (E,d,de) -> (None, fsdp?, model)  d_expert sharded — the
+  MoE w_down (E,de,d)      -> (None, model, fsdp?)  FSE-DP layout (one copy
+                                                    of every expert per group)
+  ssm in_proj (d, Z)       -> (fsdp?, model)
+  ssm out_proj (di, d)     -> (model, fsdp?)
+  router / norms / scalars -> replicated
+
+``fsdp?`` = the ``data`` axis for architectures above the FSDP
+threshold (ZeRO-3-style param+state sharding; needed to fit e.g.
+nemotron-4-340b in 16 GB/chip), None otherwise.  Every proposed axis is
+divisibility-guarded: non-dividing dims fall back to replication.
+
+Decode caches: KV sequence dim sharded over ``model`` (sequence-
+parallel decode — softmax over the sharded axis lowers to psum), batch
+over (pod, data); SSM state heads over ``model``.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+FSDP_THRESHOLD = 20e9   # params; above this, in-dims shard over 'data'
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fit(mesh, axis, dim: int):
+    """axis if it divides dim (and exists in the mesh), else None."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        axes = tuple(a for a in axis if a in mesh.axis_names)
+        if not axes:
+            return None
+        if dim % _axis_size(mesh, axes) == 0:
+            return axes if len(axes) > 1 else axes[0]
+        # try shrinking the product
+        for sub in (axes[1:], axes[:1]):
+            if sub and dim % _axis_size(mesh, sub) == 0:
+                return sub if len(sub) > 1 else sub[0]
+        return None
+    if axis not in mesh.axis_names:
+        return None
+    return axis if dim % mesh.shape[axis] == 0 else None
+
+
+def _pad(spec_tail, ndim: int) -> P:
+    tail = tuple(spec_tail)
+    assert len(tail) <= ndim, (tail, ndim)
+    return P(*((None,) * (ndim - len(tail)) + tail))
+
+
+_LAST = lambda path: path.split("/")[-1]
+
+def path_key(path) -> str:
+    parts = []
+    for p in path:
+        for attr in ("key", "idx", "name"):
+            if hasattr(p, attr):
+                parts.append(str(getattr(p, attr)))
+                break
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+
+def param_spec(path: str, shape, mesh, *, fsdp: bool) -> P:
+    """PartitionSpec for a parameter leaf, identified by its path name."""
+    name = _LAST(path)
+    nd = len(shape)
+    f = ("pod", "data") if fsdp else None   # ZeRO dims span pods when present
+    model = "model"
+    in_moe = "moe" in path.split("/")
+
+    if name in ("scale", "bias", "A_log", "D", "dt_bias", "conv_b"):
+        return P()
+    if name == "w_router":
+        return P()
+    if name == "embed":
+        return _pad((None, _fit(mesh, model, shape[-1])), nd)
+    if name == "lm_head":
+        return _pad((_fit(mesh, f, shape[-2]), _fit(mesh, model, shape[-1])), nd)
+    if name in ("wq", "wk", "wv"):
+        return _pad((_fit(mesh, f, shape[-2]), _fit(mesh, model, shape[-1])), nd)
+    if name == "wo":
+        return _pad((_fit(mesh, model, shape[-2]), _fit(mesh, f, shape[-1])), nd)
+    if name in ("w_up", "w_gate"):
+        if in_moe and nd >= 3:   # (E, d, de): FSE-DP d_expert sharding
+            return _pad((None, _fit(mesh, f, shape[-2]), _fit(mesh, model, shape[-1])), nd)
+        return _pad((_fit(mesh, f, shape[-2]), _fit(mesh, model, shape[-1])), nd)
+    if name == "w_down":
+        if in_moe and nd >= 3:   # (E, de, d)
+            return _pad((None, _fit(mesh, model, shape[-2]), _fit(mesh, f, shape[-1])), nd)
+        return _pad((_fit(mesh, model, shape[-2]), _fit(mesh, f, shape[-1])), nd)
+    if name == "in_proj":
+        return _pad((_fit(mesh, f, shape[-2]), _fit(mesh, model, shape[-1])), nd)
+    if name == "out_proj":
+        return _pad((_fit(mesh, model, shape[-2]), _fit(mesh, f, shape[-1])), nd)
+    if name == "conv_w":
+        return _pad((None, _fit(mesh, model, shape[-1])), nd)
+    return P()   # anything unrecognized: replicate
+
+
+def _tree_specs(tree, mesh, fn):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        out.append(fn(path_key(path), leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_shardings(params_struct, mesh, *, fsdp: bool):
+    return _tree_specs(params_struct, mesh,
+                       lambda k, s: NamedSharding(mesh, param_spec(k, s, mesh, fsdp=fsdp)))
+
+
+def opt_shardings(opt_struct, params_struct, mesh, *, fsdp: bool):
+    """m/v follow their parameter's spec; step is replicated."""
+    pspec = param_shardings(params_struct, mesh, fsdp=fsdp)
+    rep = NamedSharding(mesh, P())
+    return type(opt_struct)(step=rep, m=pspec, v=pspec)
+
+
+def cache_spec(path: str, shape, mesh, *, batch_axes) -> P:
+    """Decode-cache leaf specs (see module docstring)."""
+    name = _LAST(path)
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    if name in ("k", "v"):           # (nper, B, S, kv, hd)
+        b = _fit(mesh, batch_axes, shape[-4])
+        s = _fit(mesh, "model", shape[-3])
+        return _pad((b, s, None, None), nd)
+    if name == "ssd":                # (nper, B, nh, hd, n)
+        b = _fit(mesh, batch_axes, shape[-4])
+        h = _fit(mesh, "model", shape[-3])
+        return _pad((b, h, None, None), nd)
+    if name == "conv":               # (nper, B, K, d_xBC)
+        b = _fit(mesh, batch_axes, shape[-3])
+        dd = _fit(mesh, "model", shape[-1])
+        return _pad((b, None, dd), nd)
+    if name in ("cross_k", "cross_v"):   # (L, B, F, kv, hd)
+        b = _fit(mesh, batch_axes, shape[-4])
+        return _pad((b, None, None, None), nd)
+    # fallback: shard the largest dim that fits the batch axes
+    return _pad((_fit(mesh, batch_axes, shape[1]) if nd > 1 else None,), min(nd, 2))
+
+
+def cache_shardings(cache_struct, mesh, batch_axes):
+    return _tree_specs(cache_struct, mesh,
+                       lambda k, s: NamedSharding(mesh, cache_spec(k, s, mesh,
+                                                                   batch_axes=batch_axes)))
+
+
+def batch_spec(name: str, shape, mesh, batch_axes) -> P:
+    nd = len(shape)
+    b = _fit(mesh, batch_axes, shape[0]) if nd else None
+    return P(*((b,) + (None,) * (nd - 1)))
+
+
+def batch_shardings(batch_struct, mesh, batch_axes):
+    return {k: NamedSharding(mesh, batch_spec(k, v.shape, mesh, batch_axes))
+            for k, v in batch_struct.items()}
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# in-model constraints (used inside traced model code; no-ops without a mesh)
+# ---------------------------------------------------------------------------
+
+def constrain_batch_only(x):
+    """Pin an activation to batch-only sharding (model-axis replicated).
+
+    Decode q/k_new/v_new use this so the KV cache keeps its sequence-
+    parallel sharding instead of being resharded to head-sharding every
+    step (a whole-cache all-gather otherwise).
+    """
+    from repro.parallel import meshctx
+    mesh = meshctx.get_mesh()
+    if mesh is None:
+        return x
+    baxes = tuple(a for a in mesh.axis_names if a != "model")
+    b = _fit(mesh, baxes, x.shape[0]) if x.ndim else None
+    spec = P(*((b,) + (None,) * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_kv_seq(x):
+    """Pin a (B,S,H,hd) KV tensor to sequence-over-model sharding (the
+    S-stationary decode contract: scores/outputs reduce over the sharded
+    S instead of resharding the cache to head-sharding)."""
+    from repro.parallel import meshctx
+    mesh = meshctx.get_mesh()
+    if mesh is None or x.ndim != 4 or "model" not in mesh.axis_names:
+        return x
+    if x.shape[1] % mesh.shape["model"]:
+        return x
+    baxes = tuple(a for a in mesh.axis_names if a != "model")
+    b = _fit(mesh, baxes, x.shape[0])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(b, "model", None, None)))
+
+
+def constrain_seq_sharded(x):
+    """Residual-stream activations (B,S,d) live sequence-sharded over
+    ``model`` between layers (Megatron-SP): the scan carry then costs
+    1/16th of the HBM and the attention/FFN entry gathers become the
+    standard SP all-gather / reduce-scatter pair."""
+    from repro.parallel import meshctx
+    mesh = meshctx.get_mesh()
+    if mesh is None or x.ndim != 3 or "model" not in mesh.axis_names:
+        return x
+    if x.shape[1] % mesh.shape["model"]:
+        return x
+    baxes = tuple(a for a in mesh.axis_names if a != "model")
+    b = _fit(mesh, baxes, x.shape[0])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(b, "model", None)))
+
+
+def unshard_slot_params(slot):
+    """ZeRO-3 per-layer gather: constrain a scan-sliced layer's params to
+    their model-only (fsdp=False) sharding *inside* the loop body, so the
+    FSDP all-gather happens once per layer instead of being hoisted as a
+    whole-stack gather before the scan (which OOMs 340B)."""
+    from repro.parallel import meshctx
+    mesh = meshctx.get_mesh()
+    if mesh is None:
+        return slot
+    flat, treedef = jax.tree_util.tree_flatten_with_path(slot)
+    out = []
+    for path, leaf in flat:
+        spec = param_spec(path_key(path), leaf.shape, mesh, fsdp=False)
+        out.append(jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,91 @@
+"""Chiplet-array hardware model (paper Table I).
+
+All constants default to the paper's taped-out 2×2 5nm MCM prototype:
+DDR3-1600 4×25.6 GB/s, UCIe D2D 288 GB/s per chiplet, 2048-MAC compute
+dies at 800 MHz (4.865 TOPS), FDI-to-FDI latency ≈ 4 ns/hop.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HardwareConfig:
+    rows: int = 2
+    cols: int = 2
+    tops: float = 4.865e12            # per-die peak ops/s (MAC*2*freq class)
+    d2d_gbps: float = 288e9           # per-chiplet D2D bandwidth (bytes/s)
+    d2d_hop_latency: float = 4.02e-9  # FDI-to-FDI (s/hop)
+    ddr_channels: int = 4
+    ddr_gbps_per_channel: float = 25.6e9
+    buffer_bytes: int = 8 * 2 ** 20   # per-die SRAM available for expert weights
+    bytes_per_param: int = 2          # bf16 weights
+    bytes_per_act: int = 2
+    freq_hz: float = 800e6
+
+    @property
+    def num_chiplets(self) -> int:
+        return self.rows * self.cols
+
+    @property
+    def ddr_total(self) -> float:
+        return self.ddr_channels * self.ddr_gbps_per_channel
+
+    def hops(self, a: int, b: int) -> int:
+        """Manhattan distance on the 2D mesh."""
+        ra, ca = divmod(a, self.cols)
+        rb, cb = divmod(b, self.cols)
+        return abs(ra - rb) + abs(ca - cb)
+
+
+# paper Table I prototype
+PROTOTYPE_2X2 = HardwareConfig()
+
+
+def scaled(rows: int, cols: int, base: HardwareConfig = PROTOTYPE_2X2) -> HardwareConfig:
+    """Scale the array (DDR channels grow with the array edge, as in §VI-E)."""
+    import dataclasses
+    return dataclasses.replace(base, rows=rows, cols=cols,
+                               ddr_channels=base.ddr_channels * max(1, rows // 2))
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """What the simulator needs to know about one MoE layer."""
+    name: str
+    d_model: int
+    d_expert: int
+    num_experts: int
+    top_k: int
+    n_mats: int = 3                   # swiglu: gate+up+down
+    num_layers: int = 1
+    d_ff_dense: int = 0               # attention-adjacent dense FFN (e2e only)
+    num_heads: int = 16
+    num_shared: int = 0
+
+    @property
+    def expert_bytes(self) -> int:
+        return self.n_mats * self.d_model * self.d_expert * 2
+
+    def expert_flops_per_token(self) -> float:
+        return 2.0 * self.n_mats * self.d_model * self.d_expert
+
+
+def spec_from_config(cfg) -> ModelSpec:
+    """Build a sim spec from a repro ModelConfig (must have MoE)."""
+    assert cfg.moe is not None
+    return ModelSpec(
+        name=cfg.name, d_model=cfg.d_model, d_expert=cfg.moe.d_expert,
+        num_experts=cfg.moe.num_experts, top_k=cfg.moe.top_k,
+        n_mats=3 if cfg.activation == "swiglu" else 2,
+        num_layers=cfg.num_layers, d_ff_dense=cfg.d_ff,
+        num_heads=max(1, cfg.num_heads), num_shared=cfg.moe.num_shared_experts)
+
+
+# paper Table I models for the simulator benchmarks
+PAPER_SPECS = {
+    "phi3.5-moe": ModelSpec("phi3.5-moe", 4096, 3200, 16, 2, 3, 32, 3200, 32),  # Table-I d_ffn
+    "yuan2-m32": ModelSpec("yuan2-m32", 2048, 4096, 32, 2, 3, 24, 4096, 16),
+    "deepseek-moe": ModelSpec("deepseek-moe", 2048, 1408, 64, 6, 3, 28, 1408, 16, 2),
+    "qwen3-a3b": ModelSpec("qwen3-a3b", 2048, 768, 128, 8, 3, 48, 768, 32),
+}

@@ -1,0 +1,1 @@
+from .trainer import TrainConfig, TrainResult, train, make_train_step

@@ -1,0 +1,114 @@
+"""Training loop: jit'd AdamW step, checkpoint/restart, auto-resume,
+optional int8 gradient compression on the cross-pod axis.
+
+Fault-tolerance contract: the checkpoint holds (params, opt state,
+step); the data pipeline is a pure function of step; a crash at any
+point resumes bitwise-identically from the last published checkpoint
+(tested in tests/test_train.py by killing and restarting mid-run).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpointing import manager as ckpt
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import api
+from repro.optim import adamw, compress
+
+
+@dataclass
+class TrainConfig:
+    lr: float = 3e-4
+    warmup: int = 20
+    total_steps: int = 200
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    grad_compress_bits: int = 0       # 0 = off; 8 = int8 + error feedback
+    moe_impl: Optional[str] = None
+    remat: bool = False
+    log_every: int = 10
+    state_dtype: str = "float32"
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    sched = adamw.cosine_schedule(tcfg.lr, tcfg.warmup, tcfg.total_steps)
+
+    def step_fn(params, opt_state, batch, residual):
+        def loss(p):
+            l, metrics = api.loss_fn(p, batch, cfg, moe_impl=tcfg.moe_impl,
+                                     remat=tcfg.remat)
+            return l, metrics
+        (lval, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        if tcfg.grad_compress_bits:
+            grads, residual = compress.compress_tree(
+                grads, residual, bits=tcfg.grad_compress_bits)
+        params, opt_state, om = adamw.apply(
+            params, grads, opt_state, lr=sched,
+            weight_decay=tcfg.weight_decay, max_grad_norm=tcfg.max_grad_norm)
+        metrics = dict(metrics, loss=lval, **om)
+        return params, opt_state, residual, metrics
+
+    return jax.jit(step_fn, donate_argnums=(0, 1, 3))
+
+
+@dataclass
+class TrainResult:
+    losses: list = field(default_factory=list)
+    final_step: int = 0
+    resumed_from: Optional[int] = None
+    wall_time: float = 0.0
+
+
+def train(cfg: ModelConfig, dcfg: DataConfig, tcfg: TrainConfig,
+          *, seed: int = 0, hooks: Optional[Callable[[int, dict], None]] = None,
+          crash_at_step: Optional[int] = None) -> TrainResult:
+    """Run (or resume) training. ``crash_at_step`` simulates preemption
+    (raises) — the fault-tolerance tests restart and assert continuity."""
+    key = jax.random.PRNGKey(seed)
+    params = api.init_params(key, cfg)
+    opt_state = adamw.init(params, jnp.dtype(tcfg.state_dtype))
+    residual = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params) \
+        if tcfg.grad_compress_bits else jnp.zeros(())
+    start = 0
+    resumed = None
+    if tcfg.ckpt_dir and ckpt.latest_step(tcfg.ckpt_dir) is not None:
+        state = {"params": params, "opt": opt_state, "residual": residual}
+        state, start, _ = ckpt.restore(tcfg.ckpt_dir, state)
+        params, opt_state, residual = state["params"], state["opt"], state["residual"]
+        resumed = start
+
+    data = SyntheticLM(dcfg)
+    step_fn = make_train_step(cfg, tcfg)
+    result = TrainResult(resumed_from=resumed)
+    t0 = time.time()
+
+    for step in range(start, tcfg.total_steps):
+        if crash_at_step is not None and step == crash_at_step:
+            raise RuntimeError(f"simulated preemption at step {step}")
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        params, opt_state, residual, metrics = step_fn(params, opt_state, batch, residual)
+        if step % tcfg.log_every == 0 or step == tcfg.total_steps - 1:
+            loss = float(metrics["loss"])
+            result.losses.append((step, loss))
+            if hooks:
+                hooks(step, {k: float(v) for k, v in metrics.items()})
+        if tcfg.ckpt_dir and ((step + 1) % tcfg.ckpt_every == 0
+                              or step == tcfg.total_steps - 1):
+            state = {"params": params, "opt": opt_state, "residual": residual}
+            ckpt.save(tcfg.ckpt_dir, step + 1, state)
+            ckpt.gc_old(tcfg.ckpt_dir, tcfg.keep_ckpts)
+
+    result.final_step = tcfg.total_steps
+    result.wall_time = time.time() - t0
+    result.params = params  # type: ignore[attr-defined]
+    return result

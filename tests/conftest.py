@@ -1,0 +1,25 @@
+import os
+import sys
+
+# smoke tests must see exactly ONE device — the 512-device flag is set
+# only inside launch/dryrun.py subprocesses, never globally.
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
+    "tests must run without the dry-run device-count flag"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import subprocess
+
+
+def run_distributed_script(name: str, timeout: int = 900) -> str:
+    """Run tests/distributed_scripts/<name> in a subprocess with 8 fake
+    devices (shard_map tests need >1 device; pytest itself must not)."""
+    here = os.path.dirname(__file__)
+    script = os.path.join(here, "distributed_scripts", name)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(here, "..", "src"))
+    out = subprocess.run([sys.executable, script], env=env, timeout=timeout,
+                         capture_output=True, text=True)
+    assert out.returncode == 0, f"{name} failed:\n{out.stdout}\n{out.stderr}"
+    return out.stdout

@@ -1,0 +1,99 @@
+"""Attention: causality, GQA, decode==full, chunked==dense, flash==ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as at
+
+D, H, KV, HD = 32, 4, 2, 8
+
+
+@pytest.fixture(scope="module")
+def params():
+    return at.attn_init(jax.random.PRNGKey(0), D, H, KV, HD, jnp.float32)
+
+
+def test_causality(params):
+    """Changing a future token never changes an earlier output."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 10, D))
+    y1 = at.attention(params, x, n_heads=H, n_kv=KV, head_dim=HD, rope_theta=1e4)
+    x2 = x.at[0, 7].set(99.0)
+    y2 = at.attention(params, x2, n_heads=H, n_kv=KV, head_dim=HD, rope_theta=1e4)
+    np.testing.assert_allclose(y1[0, :7], y2[0, :7], atol=1e-5)
+    assert not np.allclose(y1[0, 8:], y2[0, 8:], atol=1e-5)
+
+
+def test_gqa_equals_mha_when_kv_repeated():
+    """GQA(kv=2) == MHA with repeated kv weights."""
+    p = at.attn_init(jax.random.PRNGKey(2), D, H, KV, HD, jnp.float32)
+    p_full = dict(p)
+    p_full["wk"] = jnp.concatenate([p["wk"].reshape(D, KV, HD)] * (H // KV),
+                                   axis=1).reshape(D, H * HD)
+    # interleave must match _repeat_kv (jnp.repeat): build accordingly
+    wk = p["wk"].reshape(D, KV, HD)
+    p_full["wk"] = jnp.repeat(wk, H // KV, axis=1).reshape(D, H * HD)
+    wv = p["wv"].reshape(D, KV, HD)
+    p_full["wv"] = jnp.repeat(wv, H // KV, axis=1).reshape(D, H * HD)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 6, D))
+    y_g = at.attention(p, x, n_heads=H, n_kv=KV, head_dim=HD, rope_theta=0.0)
+    y_f = at.attention(p_full, x, n_heads=H, n_kv=H, head_dim=HD, rope_theta=0.0)
+    np.testing.assert_allclose(y_g, y_f, rtol=1e-4, atol=1e-5)
+
+
+def test_decode_matches_full(params):
+    S = 12
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, S, D))
+    y_full = at.attention(params, x, n_heads=H, n_kv=KV, head_dim=HD, rope_theta=1e4)
+    cache = at.prefill_kv(params, x[:, :S - 1], n_kv=KV, head_dim=HD, rope_theta=1e4)
+    cache = at.KVCache(jnp.pad(cache.k, ((0, 0), (0, 1), (0, 0), (0, 0))),
+                       jnp.pad(cache.v, ((0, 0), (0, 1), (0, 0), (0, 0))))
+    y_dec, new = at.attention_decode(params, x[:, S - 1:], cache,
+                                     jnp.full((2,), S - 1, jnp.int32),
+                                     n_heads=H, n_kv=KV, head_dim=HD, rope_theta=1e4)
+    np.testing.assert_allclose(y_dec[:, 0], y_full[:, -1], rtol=2e-4, atol=2e-4)
+    # cache got the new token written at position S-1
+    fresh = at.prefill_kv(params, x, n_kv=KV, head_dim=HD, rope_theta=1e4)
+    np.testing.assert_allclose(new.k[:, S - 1], fresh.k[:, S - 1], rtol=1e-4, atol=1e-5)
+
+
+def test_chunked_equals_dense(params, monkeypatch):
+    monkeypatch.setattr(at, "CHUNKED_THRESHOLD", 32)
+    monkeypatch.setattr(at, "QUERY_CHUNK", 8)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 64, D))
+    y_c = at.attention(params, x, n_heads=H, n_kv=KV, head_dim=HD, rope_theta=1e4)
+    monkeypatch.setattr(at, "CHUNKED_THRESHOLD", 1 << 30)
+    y_d = at.attention(params, x, n_heads=H, n_kv=KV, head_dim=HD, rope_theta=1e4)
+    np.testing.assert_allclose(y_c, y_d, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_path(params):
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 96, D))
+    y_f = at.attention(params, x, n_heads=H, n_kv=KV, head_dim=HD,
+                       rope_theta=1e4, use_flash=True)
+    y_d = at.attention(params, x, n_heads=H, n_kv=KV, head_dim=HD, rope_theta=1e4)
+    np.testing.assert_allclose(y_f, y_d, rtol=2e-4, atol=2e-4)
+
+
+def test_cross_attention_shape(params):
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 5, D))
+    mem = jax.random.normal(jax.random.PRNGKey(8), (2, 9, D))
+    y = at.cross_attention(params, x, mem, n_heads=H, n_kv=KV, head_dim=HD)
+    assert y.shape == (2, 5, D)
+
+
+def test_decode_respects_cache_len(params):
+    """Tokens beyond cache_len must not influence decode output."""
+    S = 16
+    cache = at.init_kv_cache(1, S, KV, HD, jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(9), (1, S, KV, HD))
+    v = jax.random.normal(jax.random.PRNGKey(10), (1, S, KV, HD))
+    x = jax.random.normal(jax.random.PRNGKey(11), (1, 1, D))
+    c1 = at.KVCache(k, v)
+    garbage = at.KVCache(k.at[:, 9:].set(1e3), v.at[:, 9:].set(-1e3))
+    clen = jnp.array([8], jnp.int32)
+    y1, _ = at.attention_decode(params, x, c1, clen, n_heads=H, n_kv=KV,
+                                head_dim=HD, rope_theta=1e4)
+    y2, _ = at.attention_decode(params, x, garbage, clen, n_heads=H, n_kv=KV,
+                                head_dim=HD, rope_theta=1e4)
+    np.testing.assert_allclose(y1, y2, atol=1e-5)

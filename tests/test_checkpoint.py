@@ -1,0 +1,57 @@
+"""Checkpoint manager: atomicity, latest pointer, gc, structure checks."""
+import os
+import shutil
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing import manager as M
+
+
+def _tree(x=1.0):
+    return {"a": jnp.full((4, 4), x), "b": {"c": jnp.arange(6, dtype=jnp.int32)}}
+
+
+def test_save_restore_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        M.save(d, 10, _tree(2.5), extra={"note": "hi"})
+        got, step, extra = M.restore(d, _tree(0.0))
+        assert step == 10 and extra["note"] == "hi"
+        np.testing.assert_array_equal(np.asarray(got["a"]), 2.5)
+
+
+def test_latest_pointer_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        for s in (10, 20, 30, 40):
+            M.save(d, s, _tree(float(s)))
+        assert M.latest_step(d) == 40
+        M.gc_old(d, keep=2)
+        assert M.all_steps(d) == [30, 40]
+        got, step, _ = M.restore(d, _tree(0.0))
+        assert step == 40
+
+
+def test_crash_during_write_leaves_previous_intact():
+    """A stale .tmp dir (simulated mid-write crash) must not break restore."""
+    with tempfile.TemporaryDirectory() as d:
+        M.save(d, 10, _tree(1.0))
+        os.makedirs(os.path.join(d, "step_00000020.tmp-999"))
+        assert M.latest_step(d) == 10
+        got, step, _ = M.restore(d, _tree(0.0))
+        assert step == 10
+
+
+def test_missing_key_raises():
+    with tempfile.TemporaryDirectory() as d:
+        M.save(d, 1, {"a": jnp.zeros((2,))})
+        with pytest.raises(KeyError):
+            M.restore(d, _tree(0.0))
+
+
+def test_restore_casts_dtype():
+    with tempfile.TemporaryDirectory() as d:
+        M.save(d, 1, {"a": jnp.ones((3,), jnp.float32)})
+        got, _, _ = M.restore(d, {"a": jnp.zeros((3,), jnp.bfloat16)})
+        assert got["a"].dtype == jnp.bfloat16

@@ -1,0 +1,75 @@
+"""Config registry: all assigned archs resolve, param counts match the
+published sizes, reduced configs stay smoke-sized."""
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, PAPER_MODELS, get_config,
+                           list_configs, reduced_config)
+from repro.configs.shapes import SHAPES, SHAPE_ORDER, applicable, cells
+
+# published parameter counts (±12% tolerance: embeddings/norm conventions)
+EXPECTED_B = {
+    "nemotron-4-15b": 15.6, "yi-6b": 6.06, "stablelm-1.6b": 1.64,
+    "nemotron-4-340b": 341.0, "jamba-v0.1-52b": 52.0, "whisper-base": 0.09,
+    "granite-moe-1b-a400m": 1.33, "phi3.5-moe-42b-a6.6b": 41.9,
+    "internvl2-2b": 1.9, "mamba2-370m": 0.37,
+}
+
+
+def test_all_archs_registered():
+    for a in ASSIGNED_ARCHS:
+        assert get_config(a).name == a
+    assert len(ASSIGNED_ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_counts(arch):
+    got = get_config(arch).param_count() / 1e9
+    want = EXPECTED_B[arch]
+    assert abs(got - want) / want < 0.15, (arch, got, want)
+
+
+def test_active_params():
+    phi = get_config("phi3.5-moe-42b-a6.6b")
+    assert 5.5e9 < phi.active_param_count() < 7.5e9      # 6.6B active
+    dense = get_config("yi-6b")
+    assert dense.active_param_count() == dense.param_count()
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_small(arch):
+    r = reduced_config(arch)
+    assert r.param_count() < 5e6
+
+
+def test_shape_cells_total():
+    """10 archs × 4 shapes = 40 cells; skips are annotated, never silent."""
+    total = runnable = 0
+    for a in ASSIGNED_ARCHS:
+        for s, ok, why in cells(get_config(a)):
+            total += 1
+            runnable += ok
+            if not ok:
+                assert why
+    assert total == 40
+    # long_500k runs only for ssm+hybrid (2 of 10) => 40 - 8 skips
+    assert runnable == 32
+
+
+def test_long_context_applicability():
+    assert applicable(get_config("mamba2-370m"), SHAPES["long_500k"])[0]
+    assert applicable(get_config("jamba-v0.1-52b"), SHAPES["long_500k"])[0]
+    assert not applicable(get_config("yi-6b"), SHAPES["long_500k"])[0]
+
+
+def test_layer_plans():
+    jamba = get_config("jamba-v0.1-52b")
+    kinds = jamba.layer_kinds()
+    assert kinds.count("attn") == 4 and kinds.count("ssm") == 28   # 1:7
+    assert jamba.ffn_kinds().count("moe") == 16                    # every 2nd
+    m2 = get_config("mamba2-370m")
+    assert set(m2.layer_kinds()) == {"ssm"}
+
+
+def test_paper_models_available():
+    for m in PAPER_MODELS:
+        assert get_config(m).moe is not None

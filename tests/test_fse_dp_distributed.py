@@ -1,0 +1,23 @@
+"""Distributed FSE-DP / EP / TP correctness on 8 fake devices
+(subprocess — pytest itself stays single-device)."""
+import pytest
+
+from conftest import run_distributed_script
+
+
+@pytest.mark.slow
+def test_all_modes_match_oracle():
+    out = run_distributed_script("fsedp_modes.py")
+    assert "ALL MODES MATCH ORACLE" in out
+
+
+@pytest.mark.slow
+def test_gradients_through_ring():
+    out = run_distributed_script("fsedp_grad.py")
+    assert "gradients match" in out
+
+
+@pytest.mark.slow
+def test_small_mesh_dryrun_machinery():
+    out = run_distributed_script("dryrun_small.py", timeout=1800)
+    assert out.count(" ok ") >= 15      # 5 archs × 3 kinds

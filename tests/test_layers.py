@@ -1,0 +1,59 @@
+"""Primitive layers: norms, RoPE, activations — unit + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+def test_rmsnorm_unit_scale():
+    p = L.rmsnorm_init(16)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16)) * 10
+    y = L.rmsnorm(p, x)
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_layernorm_moments():
+    p = L.layernorm_init(32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 32)) * 3 + 5
+    y = np.asarray(L.layernorm(p, x))
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(y.std(-1), 1.0, rtol=1e-2)
+
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 4, 16))
+    pos = jnp.arange(8)[None, :]
+    y = L.apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-4)
+
+
+def test_rope_relative_shift():
+    """<q_i, k_j> after RoPE depends only on i - j."""
+    hd = 32
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 1, hd))
+    def dot_at(i, j):
+        qi = L.apply_rope(q, jnp.array([[i]]), 1e4)
+        kj = L.apply_rope(k, jnp.array([[j]]), 1e4)
+        return float(jnp.sum(qi * kj))
+    assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-4
+    assert abs(dot_at(5, 3) - dot_at(6, 3)) > 1e-6   # actually differs by pos
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 64))
+def test_relu2_nonneg(d):
+    f = L.activation_fn("relu2")
+    x = jax.random.normal(jax.random.PRNGKey(d), (d,))
+    assert bool(jnp.all(f(x) >= 0))
+
+
+def test_sinusoidal_shape():
+    enc = L.sinusoidal_positions(10, 8)
+    assert enc.shape == (10, 8)
+    assert bool(jnp.all(jnp.abs(enc) <= 1.0 + 1e-6))

@@ -1,0 +1,108 @@
+"""MoE block: routing properties (hypothesis), dense == per-token loop
+oracle, capacity semantics, shared experts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MoEConfig
+from repro.core import gating
+from repro.models import moe as moe_mod
+
+
+def _setup(E=8, k=2, d=16, de=32, cf=4.0, act="swiglu", shared=0):
+    moe = MoEConfig(num_experts=E, top_k=k, d_expert=de, capacity_factor=cf,
+                    num_shared_experts=shared)
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), d, moe, act, jnp.float32)
+    return moe, params
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.integers(2, 16), st.integers(1, 4))
+def test_routing_properties(T, E, k):
+    k = min(k, E)
+    d = 8
+    p = gating.router_init(jax.random.PRNGKey(E * 100 + k), d, E, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(T), (T, d), jnp.float32)
+    r = gating.route(p, x, top_k=k)
+    assert r.indices.shape == (T, k)
+    # weights renormalized
+    np.testing.assert_allclose(np.asarray(r.weights).sum(-1), 1.0, rtol=1e-4)
+    # combine rows sum to 1 and have exactly k nonzeros
+    comb = np.asarray(r.combine)
+    np.testing.assert_allclose(comb.sum(-1), 1.0, rtol=1e-4)
+    assert ((comb > 0).sum(-1) <= k).all()
+    # full probs are a distribution
+    np.testing.assert_allclose(np.asarray(r.probs).sum(-1), 1.0, rtol=1e-4)
+
+
+def test_dense_matches_per_token_loop():
+    moe, params = _setup()
+    x = jax.random.normal(jax.random.PRNGKey(1), (10, 16), jnp.float32)
+    r = gating.route(params["router"], x, top_k=moe.top_k)
+    y = moe_mod.moe_dense(params, x, r, "swiglu")
+
+    # per-token oracle
+    idx = np.asarray(r.indices)
+    w = np.asarray(r.weights)
+    y_ref = np.zeros_like(np.asarray(y))
+    for t in range(10):
+        for j in range(moe.top_k):
+            e = idx[t, j]
+            xe = x[t][None]
+            h = jax.nn.silu(xe @ params["w_gate"][e]) * (xe @ params["w_up"][e])
+            y_ref[t] += w[t, j] * np.asarray(h @ params["w_down"][e])[0]
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_capacity_matches_dense_with_ample_capacity():
+    moe, params = _setup(cf=8.0 / 2.0)        # C >= T: nothing drops
+    x = jax.random.normal(jax.random.PRNGKey(2), (12, 16), jnp.float32)
+    r = gating.route(params["router"], x, top_k=moe.top_k)
+    y_c = moe_mod.moe_capacity(params, x, r, moe, "swiglu")
+    y_d = moe_mod.moe_dense(params, x, r, "swiglu")
+    np.testing.assert_allclose(y_c, y_d, rtol=2e-4, atol=2e-4)
+
+
+def test_capacity_drops_overflow():
+    """With capacity 1 token per expert, overflow tokens contribute 0."""
+    moe, params = _setup(E=2, k=1, cf=2.0 / 16.0)   # C = 1 for T=16
+    x = jnp.ones((16, 16), jnp.float32)             # identical tokens -> same expert
+    r = gating.route(params["router"], x, top_k=1)
+    y = moe_mod.moe_capacity(params, x, r, moe, "swiglu")
+    nz = np.abs(np.asarray(y)).sum(-1) > 1e-9
+    assert nz.sum() == 1                            # only the first survives
+
+
+def test_aux_loss_uniform_vs_skewed():
+    r_uniform = gating.Routing(
+        indices=jnp.arange(8).reshape(8, 1) % 4,
+        weights=jnp.ones((8, 1)),
+        probs=jnp.full((8, 4), 0.25),
+        combine=jax.nn.one_hot(jnp.arange(8) % 4, 4))
+    r_skew = gating.Routing(
+        indices=jnp.zeros((8, 1), jnp.int32),
+        weights=jnp.ones((8, 1)),
+        probs=jnp.eye(4)[jnp.zeros(8, jnp.int32)],
+        combine=jax.nn.one_hot(jnp.zeros(8, jnp.int32), 4))
+    assert float(gating.aux_load_balance_loss(r_skew, 4)) > \
+        float(gating.aux_load_balance_loss(r_uniform, 4))
+
+
+def test_shared_experts_added():
+    moe, params = _setup(shared=1)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 4, 16), jnp.float32)
+    y = moe_mod.moe_block(params, x, moe, "swiglu", impl="dense")
+    params2 = dict(params)
+    params2["shared"] = jax.tree.map(jnp.zeros_like, params["shared"])
+    y2 = moe_mod.moe_block(params2, x, moe, "swiglu", impl="dense")
+    assert not np.allclose(np.asarray(y), np.asarray(y2))
+
+
+def test_expert_token_counts():
+    moe, params = _setup(E=4, k=2)
+    x = jax.random.normal(jax.random.PRNGKey(4), (20, 16), jnp.float32)
+    r = gating.route(params["router"], x, top_k=2)
+    counts = np.asarray(gating.expert_token_counts(r))
+    assert counts.sum() == 20 * 2

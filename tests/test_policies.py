@@ -1,0 +1,86 @@
+"""Paired-load ordering + Algorithm 2 token-buffering semantics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policies import (QoSState, TokenBufferPolicy, expert_pairs,
+                                 paired_load_order)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 100), min_size=1, max_size=32))
+def test_paired_order_is_permutation(counts):
+    order = paired_load_order(counts)
+    assert sorted(order) == list(range(len(counts)))
+
+
+def test_paired_order_interleaves_hot_cold():
+    counts = [100, 1, 50, 2, 25, 3]
+    order = paired_load_order(counts)
+    # first two entries: hottest then coldest active
+    assert counts[order[0]] == 100
+    assert counts[order[1]] == 1
+    assert counts[order[2]] == 50
+    assert counts[order[3]] == 2
+
+
+def test_idle_experts_last():
+    counts = [5, 0, 3, 0]
+    order = paired_load_order(counts)
+    assert set(order[-2:]) == {1, 3}
+
+
+def test_expert_pairs():
+    pairs = expert_pairs([10, 1, 5, 2, 0])
+    assert pairs[0] == (0, 1)      # hottest with coldest
+    assert pairs[1] == (2, 3)
+
+
+class TestAlgorithm2:
+    def test_timer_grants_after_threshold(self):
+        p = TokenBufferPolicy(theta_min=4, n_threshold=3)
+        for _ in range(2):
+            p.on_forward_pass("r")
+        assert p.state("r").timer == 0
+        p.on_forward_pass("r")
+        assert p.state("r").timer == 1
+        assert p.state("r").fw_count == 0          # reset (line 4)
+
+    def test_defer_requires_cold_and_credit(self):
+        p = TokenBufferPolicy(theta_min=4, n_threshold=1)
+        counts = [10, 2, 8]
+        # no credit yet
+        assert not p.should_defer("r", [1], counts)
+        p.on_forward_pass("r")
+        # credit + cold expert (n_e=2 < 4) -> defer + decrement (lines 6-8)
+        assert p.should_defer("r", [1], counts)
+        assert p.state("r").timer == 0
+        # credit exhausted
+        assert not p.should_defer("r", [1], counts)
+
+    def test_hot_experts_never_defer(self):
+        p = TokenBufferPolicy(theta_min=4, n_threshold=1)
+        p.on_forward_pass("r")
+        assert not p.should_defer("r", [0, 2], [10, 2, 8])
+        assert p.state("r").timer == 1             # credit kept
+
+    def test_from_slack(self):
+        p = TokenBufferPolicy.from_slack(0.10)
+        assert p.n_threshold == 10
+        p = TokenBufferPolicy.from_slack(0.30)
+        assert p.n_threshold == 4
+        p0 = TokenBufferPolicy.from_slack(0.0)
+        p0.on_forward_pass("r")
+        assert p0.state("r").timer == 0            # never grants
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 20), st.integers(1, 200))
+    def test_deferral_rate_bounded_by_slack(self, n_threshold, passes):
+        """#deferrals <= #passes / n_threshold + 1 (the QoS contract)."""
+        p = TokenBufferPolicy(theta_min=10, n_threshold=n_threshold)
+        defers = 0
+        for _ in range(passes):
+            p.on_forward_pass("r")
+            if p.should_defer("r", [0], [1]):      # always-cold expert
+                defers += 1
+        assert defers <= passes // n_threshold + 1
