@@ -1,0 +1,143 @@
+"""einsum-vs-Pallas sweep for the streamed-MoE expert GEMM.
+
+Benchmarks ``kernels.ops.streamed_moe``'s two branches — the jnp oracle
+(``use_kernels(False)``) and the Pallas micro-slice kernel — over the
+expert-FFN shapes of the config zoo, at several micro-slice widths
+(the quantity that actually streams in FSE-DP's ring).  Emits
+``BENCH_streamed_moe.json`` under artifacts/bench/.
+
+Usage:
+  PYTHONPATH=src python benchmarks/kernel_bench.py [--quick] [--full]
+      [--tokens N] [--reps N] [--out DIR]
+
+On CPU the Pallas branch runs in interpret mode, so timings there are a
+functional smoke of the dispatch layer, not kernel performance; run on
+TPU for real numbers (recorded in the JSON's ``interpret`` field).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, list_configs
+from repro.kernels import ops
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def moe_shapes():
+    """Deduped (name, E, d_model, d_expert, activation) from the zoo."""
+    seen, out = set(), []
+    for name in list_configs():
+        cfg = get_config(name)
+        if cfg.moe is None:
+            continue
+        key = (cfg.moe.num_experts, cfg.d_model, cfg.moe.d_expert,
+               cfg.activation)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append((name,) + key)
+    return out
+
+
+def time_fn(fn, *args, reps):
+    jax.block_until_ready(fn(*args))              # compile + warm
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small subset / small C (default on CPU)")
+    ap.add_argument("--full", action="store_true",
+                    help="force the full sweep even on CPU")
+    ap.add_argument("--tokens", type=int, default=None,
+                    help="capacity rows per expert (C)")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--out", default=ART)
+    args = ap.parse_args(argv)
+
+    backend = jax.default_backend()
+    quick = args.quick or (backend == "cpu" and not args.full)
+    C = args.tokens or (16 if quick else 128)
+    reps = min(args.reps, 2) if quick else args.reps
+    budget = (256 if quick else 2048) * 1024 * 1024  # weight bytes per row
+    slice_divs = (4, 16) if quick else (1, 4, 16)
+
+    shapes = moe_shapes()
+    if quick:
+        shapes = shapes[:3]
+
+    rows, skipped = [], 0
+    for name, E, d, de, act in shapes:
+        for div in slice_divs:
+            m = max(1, de // div)
+            n_w = 3 if act == "swiglu" else 2
+            w_bytes = n_w * E * d * m * 4
+            if w_bytes > budget:
+                skipped += 1
+                continue
+            ks = jax.random.split(jax.random.PRNGKey(0), 4)
+            xe = jax.random.normal(ks[0], (E, C, d), jnp.float32)
+            wu = jax.random.normal(ks[1], (E, d, m), jnp.float32) * 0.1
+            wd = jax.random.normal(ks[2], (E, m, d), jnp.float32) * 0.1
+            wg = (jax.random.normal(ks[3], (E, d, m), jnp.float32) * 0.1
+                  if act == "swiglu" else None)
+
+            def ref_fn(xe, wg, wu, wd):
+                with ops.use_kernels(False):
+                    return ops.streamed_moe(xe, wg, wu, wd, act)
+
+            def pallas_fn(xe, wg, wu, wd):
+                with ops.use_kernels(True):
+                    return ops.streamed_moe(xe, wg, wu, wd, act)
+
+            t_ref = time_fn(jax.jit(ref_fn), xe, wg, wu, wd, reps=reps)
+            t_pal = time_fn(jax.jit(pallas_fn), xe, wg, wu, wd, reps=reps)
+            row = {"config": name, "E": E, "d_model": d, "d_expert": de,
+                   "slice_div": div, "m_slice": m, "C": C, "activation": act,
+                   "einsum_ms": round(t_ref * 1e3, 4),
+                   "pallas_ms": round(t_pal * 1e3, 4),
+                   "speedup": round(t_ref / t_pal, 3) if t_pal else None}
+            rows.append(row)
+            print(f"{name:24s} E={E:<3d} d={d:<6d} m={m:<6d} C={C:<4d} {act:7s}"
+                  f" einsum={row['einsum_ms']:.3f}ms pallas={row['pallas_ms']:.3f}ms"
+                  f" x{row['speedup']}")
+    if skipped:
+        print(f"# skipped {skipped} rows over the {budget >> 20} MiB "
+              f"weight budget (use --full / more RAM)")
+
+    payload = {
+        "bench": "streamed_moe_kernel_vs_einsum",
+        "backend": backend,
+        "interpret": backend == "cpu",
+        "jax": jax.__version__,
+        "quick": quick,
+        "unix_time": int(time.time()),
+        "rows": rows,
+    }
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, "BENCH_streamed_moe.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# {len(rows)} rows -> {os.path.relpath(path)}")
+    return path
+
+
+if __name__ == "__main__":
+    main()

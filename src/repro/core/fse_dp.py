@@ -33,20 +33,39 @@ Three execution modes, chosen statically from the token layout
 from __future__ import annotations
 
 import functools
+import inspect
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import MoEConfig
+from repro.kernels import ops as kops
 from repro.parallel import meshctx
 from . import gating
 
 try:  # jax>=0.6 exposes shard_map at top level
-    from jax import shard_map as _shard_map_mod  # type: ignore
-    shard_map = jax.shard_map
+    _jax_shard_map = jax.shard_map  # type: ignore[attr-defined]
 except Exception:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+    from jax.experimental.shard_map import shard_map as _jax_shard_map  # type: ignore
+
+# replication-checker kwarg is check_rep (jax<=0.5) / check_vma (jax>=0.6)
+_CHECK_KW = next((k for k in ("check_vma", "check_rep")
+                  if k in inspect.signature(_jax_shard_map).parameters), None)
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, **kw):
+    """shard_map with the static replication checker off by default:
+    ``pallas_call`` (the streamed-MoE kernel inside the body) has no
+    replication rule, and jax 0.4.x's checker rewrite of an enclosing
+    ``lax.scan`` mis-infers the aux-loss carry as non-replicated even on
+    the pure-jnp path (the seed dry-run failure).  All replicated outputs
+    here (aux, index-mode y) are explicitly pmean/psum'd, so the check is
+    redundant.  Callers can re-enable it via the keyword."""
+    if _CHECK_KW and _CHECK_KW not in kw:
+        kw[_CHECK_KW] = False
+    return _jax_shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
 
 
 def pmean_all(x, axes):
@@ -67,15 +86,12 @@ def pmean_all(x, axes):
 # ---------------------------------------------------------------------------
 
 def _expert_partial(xe, w_g, w_u, w_d, activation):
-    """xe: (E,C,d); w_g/w_u: (E,d,m); w_d: (E,m,d) -> partial y (E,C,d) fp32."""
-    if activation == "swiglu":
-        h = jax.nn.silu(jnp.einsum("ecd,edm->ecm", xe, w_g)) \
-            * jnp.einsum("ecd,edm->ecm", xe, w_u)
-    elif activation == "relu2":
-        h = jnp.square(jax.nn.relu(jnp.einsum("ecd,edm->ecm", xe, w_u)))
-    else:
-        h = jax.nn.gelu(jnp.einsum("ecd,edm->ecm", xe, w_u))
-    return jnp.einsum("ecm,emd->ecd", h, w_d).astype(jnp.float32)
+    """xe: (E,C,d); w_g/w_u: (E,d,m); w_d: (E,m,d) -> partial y (E,C,d) fp32.
+
+    Dispatches through ``kernels.ops.streamed_moe``: the Pallas micro-slice
+    kernel when kernels are enabled, the jnp oracle under
+    ``use_kernels(False)`` / REPRO_NO_PALLAS."""
+    return kops.streamed_moe(xe, w_g, w_u, w_d, activation)
 
 
 def _ring_stream(xe, w_g, w_u, w_d, activation, axis, P_, micro_slices):

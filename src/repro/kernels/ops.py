@@ -3,6 +3,14 @@
 ``use_kernels(False)`` (or the REPRO_NO_PALLAS env var) routes every op
 to its pure-jnp oracle — the dry-run path uses this so the 512-device
 SPMD compile sees plain XLA ops.
+
+``streamed_moe`` is the dispatch layer the model code calls: both the
+FSE-DP ring step (``repro.core.fse_dp._expert_partial``) and the
+single-device capacity path (``repro.models.moe.moe_capacity``) flow
+through it, so the paper's micro-slice kernel is the hot path whenever
+kernels are enabled.  The Pallas branch carries a custom VJP (backward
+derived from the jnp oracle) so gradients flow through training and the
+FSE-DP ring transpose without a hand-written backward kernel.
 """
 from __future__ import annotations
 
@@ -34,11 +42,41 @@ def kernels_enabled() -> bool:
     return _USE.get()
 
 
+# ---------------------------------------------------------------------------
+# streamed_moe — differentiable kernel dispatch
+# ---------------------------------------------------------------------------
+
+def _streamed_moe_raw(activation, opts, xe, w_g, w_u, w_d):
+    return streamed_moe_kernel(xe, w_g, w_u, w_d, activation=activation,
+                               **dict(opts))
+
+
+_streamed_moe_diff = jax.custom_vjp(_streamed_moe_raw, nondiff_argnums=(0, 1))
+
+
+def _streamed_moe_fwd(activation, opts, xe, w_g, w_u, w_d):
+    out = _streamed_moe_raw(activation, opts, xe, w_g, w_u, w_d)
+    return out, (xe, w_g, w_u, w_d)
+
+
+def _streamed_moe_bwd(activation, opts, res, g):
+    xe, w_g, w_u, w_d = res
+    _, vjp = jax.vjp(
+        lambda xe, wg, wu, wd: ref.streamed_moe_ref(xe, wg, wu, wd, activation),
+        xe, w_g, w_u, w_d)
+    return vjp(g)
+
+
+_streamed_moe_diff.defvjp(_streamed_moe_fwd, _streamed_moe_bwd)
+
+
 def streamed_moe(xe, w_g, w_u, w_d, activation: str, **kw):
-    if kernels_enabled():
-        return streamed_moe_kernel(xe, w_g if w_g is not None else w_u,
-                                   w_u, w_d, activation=activation, **kw)
-    return ref.streamed_moe_ref(xe, w_g, w_u, w_d, activation)
+    """Grouped expert FFN over one micro-slice.  ``w_g=None`` selects the
+    gateless path natively (no placeholder operand)."""
+    if not kernels_enabled():
+        return ref.streamed_moe_ref(xe, w_g, w_u, w_d, activation)
+    opts = tuple(sorted(kw.items()))
+    return _streamed_moe_diff(activation, opts, xe, w_g, w_u, w_d)
 
 
 def flash_attention(q, k, v, **kw):

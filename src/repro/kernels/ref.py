@@ -10,8 +10,12 @@ import jax.numpy as jnp
 # ---------------------------------------------------------------------------
 
 def streamed_moe_ref(xe, w_g, w_u, w_d, activation: str):
-    """xe: (E,C,d); w_g/w_u: (E,d,m); w_d: (E,m,d) -> (E,C,d) fp32."""
+    """xe: (E,C,d); w_g/w_u: (E,d,m); w_d: (E,m,d) -> (E,C,d) fp32.
+
+    ``w_g`` may be None for the gateless activations (relu2 / gelu)."""
     if activation == "swiglu":
+        if w_g is None:
+            raise ValueError("activation='swiglu' requires w_g")
         h = jax.nn.silu(jnp.einsum("ecd,edm->ecm", xe, w_g)) \
             * jnp.einsum("ecd,edm->ecm", xe, w_u)
     elif activation == "relu2":

@@ -10,8 +10,17 @@ automatic double-buffering of the BlockSpec'd operands (the DDR→SRAM
 flow of Fig. 6); the D2D hop between chips is the ``ppermute`` in
 ``repro.core.fse_dp`` one level up.
 
-Grid: (E, C/Tc) — experts outer so weight blocks are revisited across
-token tiles of the same expert; token tiles inner.
+Grid: (E, C/Tc, d/Tj, m/Tk, d/Ti) — experts outer so weight blocks are
+revisited across token tiles of the same expert; the three inner dims
+tile the output d_model (j), the micro-slice hidden dim (k) and the
+contraction d_model (i) so micro-slices larger than one VMEM block
+still lower.  The pre-activation accumulates in a VMEM scratch over
+``i``; the second GEMM accumulates into the (revisited) output block
+over ``k`` — both reduction dims are grid-minor, which is the Pallas
+requirement for accumulate-safe block revisiting.  With the default
+tile sizes (full d/m) the grid degenerates to the classic (E, C/Tc)
+form.  Gateless activations (relu2 / gelu) lower without a w_gate
+operand at all, so no placeholder slice is ever shipped HBM→VMEM.
 """
 from __future__ import annotations
 
@@ -20,57 +29,136 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 DEFAULT_TOKEN_TILE = 128
+# auto-tiling target: keep one streamed weight block under this many bytes
+# of VMEM (w_g + w_u + w_d + double-buffering must fit in ~16 MB/core)
+VMEM_BLOCK_BYTES = 4 * 1024 * 1024
 
 
-def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, activation):
-    x = x_ref[0]                      # (Tc, d)
-    wu = wu_ref[0]                    # (d, m)
+def _fit_tile(dim: int, req: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``req`` (>= 1)."""
+    t = max(1, min(int(req), dim))
+    while dim % t:
+        t -= 1
+    return t
+
+
+def _kernel(*refs, activation, nI, C, Tc):
     if activation == "swiglu":
-        wg = wg_ref[0]
-        h = jax.nn.silu(jnp.dot(x, wg, preferred_element_type=jnp.float32)) \
-            * jnp.dot(x, wu, preferred_element_type=jnp.float32)
-    elif activation == "relu2":
-        h = jnp.square(jnp.maximum(
-            jnp.dot(x, wu, preferred_element_type=jnp.float32), 0.0))
-    else:  # gelu
-        h = jax.nn.gelu(jnp.dot(x, wu, preferred_element_type=jnp.float32))
-    wd = wd_ref[0]                    # (m, d)
-    o_ref[0] = jnp.dot(h.astype(wd.dtype), wd,
-                       preferred_element_type=jnp.float32)
+        x_ref, wg_ref, wu_ref, wd_ref, o_ref, hu_ref, hg_ref = refs
+    else:
+        x_ref, wu_ref, wd_ref, o_ref, hu_ref = refs
+        wg_ref = hg_ref = None
+    c = pl.program_id(1)
+    k = pl.program_id(3)
+    i = pl.program_id(4)
+
+    @pl.when(i == 0)
+    def _init_acc():
+        hu_ref[...] = jnp.zeros_like(hu_ref)
+        if hg_ref is not None:
+            hg_ref[...] = jnp.zeros_like(hg_ref)
+
+    x = x_ref[0]                      # (Tc, Ti)
+    hu_ref[...] += jnp.dot(x, wu_ref[0], preferred_element_type=jnp.float32)
+    if hg_ref is not None:
+        hg_ref[...] += jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(i == nI - 1)
+    def _finalize():
+        if activation == "swiglu":
+            h = jax.nn.silu(hg_ref[...]) * hu_ref[...]
+        elif activation == "relu2":
+            h = jnp.square(jnp.maximum(hu_ref[...], 0.0))
+        else:  # gelu
+            h = jax.nn.gelu(hu_ref[...])
+        # mask padded capacity rows instead of computing garbage-then-truncate
+        row = c * Tc + jax.lax.broadcasted_iota(jnp.int32, h.shape, 0)
+        h = jnp.where(row < C, h, 0.0)
+        wd = wd_ref[0]                # (Tk, Tj)
+        contrib = jnp.dot(h.astype(wd.dtype), wd,
+                          preferred_element_type=jnp.float32)
+
+        @pl.when(k == 0)
+        def _set():
+            o_ref[0] = contrib
+
+        @pl.when(k > 0)
+        def _acc():
+            o_ref[0] += contrib
 
 
 def streamed_moe_kernel(xe, w_g, w_u, w_d, *, activation: str,
                         token_tile: int = DEFAULT_TOKEN_TILE,
+                        dmodel_tile: int | None = None,
+                        dexpert_tile: int | None = None,
                         interpret: bool | None = None):
-    """xe: (E,C,d); w_g/w_u: (E,d,m); w_d: (E,m,d) -> (E,C,d) float32."""
+    """xe: (E,C,d); w_g: (E,d,m) or None; w_u: (E,d,m); w_d: (E,m,d).
+
+    Returns (E,C,d) float32.  ``w_g`` is required for swiglu and ignored
+    (never lowered as an operand) for the gateless activations.
+
+    ``dmodel_tile`` tiles d_model on both sides of the expert FFN
+    (contraction of the up-projection and output of the down-projection);
+    ``dexpert_tile`` tiles the micro-slice hidden dim.  Defaults keep
+    d_model whole and cap the hidden tile so one weight block stays under
+    ``VMEM_BLOCK_BYTES``.  Requested tiles are rounded down to divisors.
+
+    Trade-off: with ``dmodel_tile < d`` the up/gate GEMMs are recomputed
+    once per output-d tile (the activation between the two GEMMs forces
+    either that or an (Tc, m) h-scratch).  Keep d_model whole unless the
+    weight blocks genuinely overflow VMEM.
+    """
     E, C, d = xe.shape
     m = w_u.shape[-1]
+    gated = activation == "swiglu"
+    if gated and w_g is None:
+        raise ValueError("activation='swiglu' requires w_g")
+    if activation not in ("swiglu", "relu2", "gelu"):
+        raise ValueError(f"unknown activation {activation!r}")
     if interpret is None:
-        interpret = jax.default_backend() == "cpu"
-    Tc = min(token_tile, C)
+        # only TPU lowers this kernel natively (pltpu.VMEM scratch);
+        # everything else (cpu, gpu) runs the interpreter
+        interpret = jax.default_backend() != "tpu"
+
+    Tc = min(token_tile, max(C, 1))
     pad = (-C) % Tc
     if pad:
         xe = jnp.pad(xe, ((0, 0), (0, pad), (0, 0)))
     Cp = C + pad
-    grid = (E, Cp // Tc)
 
-    if activation != "swiglu":
-        w_g = w_u  # placeholder operand; kernel ignores it
+    itemsize = jnp.dtype(w_u.dtype).itemsize
+    if dexpert_tile is None:
+        dexpert_tile = max(1, VMEM_BLOCK_BYTES // max(1, d * itemsize))
+    Tk = _fit_tile(m, dexpert_tile)
+    Tj = Ti = _fit_tile(d, dmodel_tile if dmodel_tile is not None else d)
+    nI = d // Ti
+    grid = (E, Cp // Tc, d // Tj, m // Tk, nI)
+
+    in_specs = [pl.BlockSpec((1, Tc, Ti), lambda e, c, j, k, i: (e, c, i))]
+    operands = [xe]
+    if gated:
+        in_specs.append(pl.BlockSpec((1, Ti, Tk), lambda e, c, j, k, i: (e, i, k)))
+        operands.append(w_g)
+    in_specs += [
+        pl.BlockSpec((1, Ti, Tk), lambda e, c, j, k, i: (e, i, k)),   # w_up
+        pl.BlockSpec((1, Tk, Tj), lambda e, c, j, k, i: (e, k, j)),   # w_down
+    ]
+    operands += [w_u, w_d]
+    scratch = [pltpu.VMEM((Tc, Tk), jnp.float32)]                     # pre-act up
+    if gated:
+        scratch.append(pltpu.VMEM((Tc, Tk), jnp.float32))             # pre-act gate
 
     out = pl.pallas_call(
-        functools.partial(_kernel, activation=activation),
+        functools.partial(_kernel, activation=activation, nI=nI, C=C, Tc=Tc),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, Tc, d), lambda e, c: (e, c, 0)),   # token tile
-            pl.BlockSpec((1, d, m), lambda e, c: (e, 0, 0)),    # w_gate slice
-            pl.BlockSpec((1, d, m), lambda e, c: (e, 0, 0)),    # w_up slice
-            pl.BlockSpec((1, m, d), lambda e, c: (e, 0, 0)),    # w_down slice
-        ],
-        out_specs=pl.BlockSpec((1, Tc, d), lambda e, c: (e, c, 0)),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, Tc, Tj), lambda e, c, j, k, i: (e, c, j)),
         out_shape=jax.ShapeDtypeStruct((E, Cp, d), jnp.float32),
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(xe, w_g, w_u, w_d)
+    )(*operands)
     return out[:, :C]

@@ -31,6 +31,15 @@ _OP_RE = re.compile(
     r"([a-z0-9\-]+)(?:-start)?\(", re.M)
 
 
+def cost_dict(compiled) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` normalized to a flat dict — jax returns
+    a list with one dict per device program on some versions/backends."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 def _shape_bytes(shape_str: str) -> int:
     total = 0
     for dt, dims in _SHAPE_RE.findall(shape_str):

@@ -69,7 +69,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis() or {}
+        cost = analysis.cost_dict(compiled)
         try:
             hlo = compiled.as_text()
         except Exception:

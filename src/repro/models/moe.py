@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import MoEConfig
 from repro.core import gating
+from repro.kernels import ops as kops
 from .layers import dense_init
 from .mlp import ffn_init, ffn
 
@@ -94,6 +95,14 @@ def dispatch_masks(routing, T, E, C):
     return dispatch, combine
 
 
+def _expert_ffn(params, xe, activation):
+    """(E,C,d) -> (E,C,d) fp32 via the ``kernels.ops.streamed_moe`` dispatch
+    layer (Pallas micro-slice kernel, or the jnp oracle under
+    ``use_kernels(False)``)."""
+    return kops.streamed_moe(xe, params.get("w_gate"), params["w_up"],
+                             params["w_down"], activation)
+
+
 def moe_capacity(params, x2d, routing, moe: MoEConfig, activation):
     T, d = x2d.shape
     E = moe.num_experts
@@ -101,12 +110,13 @@ def moe_capacity(params, x2d, routing, moe: MoEConfig, activation):
     if sorted_dispatch_enabled():
         idx, wts = dispatch_tables(routing, T, E, C)
         xe = gather_dispatch(x2d, idx)                                     # (E,C,d)
-        ye = _expert_act(params, xe, activation)
+        ye = _expert_ffn(params, xe, activation)
         return scatter_combine(ye, idx, wts, T)
     dispatch, combine = dispatch_masks(routing, T, E, C)
     xe = jnp.einsum("tec,td->ecd", dispatch.astype(x2d.dtype), x2d)        # (E,C,d)
-    ye = _expert_act(params, xe, activation)                               # (E,C,d)
-    return jnp.einsum("tec,ecd->td", combine.astype(x2d.dtype), ye)
+    ye = _expert_ffn(params, xe, activation)                               # (E,C,d) fp32
+    return jnp.einsum("tec,ecd->td", combine.astype(jnp.float32),
+                      ye).astype(x2d.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,36 @@
+"""Import shim for the optional ``hypothesis`` dependency.
+
+Property-based cases run normally when hypothesis is installed; without
+it they are collected and skipped, so the deterministic tests in the
+same modules always run (the seed suite used to die at collection).
+
+Usage in test modules::
+
+    from _hyp import given, settings, st
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # fallback shim — mark property tests as skipped
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _Strategies:
+        """Stub namespace: every strategy constructor returns None (the
+        values are never drawn because @given skips the test)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

@@ -22,7 +22,7 @@ for arch in ["granite-moe-1b-a400m", "jamba-v0.1-52b", "mamba2-370m", "whisper-b
             fn, in_sh, out_sh, structs = build_step(cfg, shape, mesh)
             lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*structs)
             compiled = lowered.compile()
-        cost = compiled.cost_analysis() or {}
+        cost = analysis.cost_dict(compiled)
         coll = analysis.collective_bytes(compiled.as_text())
         mem = compiled.memory_analysis()
         print(f"{arch:24s} {kind:8s} ok {time.time()-t0:5.1f}s flops={cost.get('flops',0):.2e} "

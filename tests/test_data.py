@@ -1,6 +1,6 @@
 """Data pipeline: determinism (the restart contract) and learnability."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.data import DataConfig, SyntheticLM, batch_for
 

@@ -18,6 +18,14 @@ def test_gradients_through_ring():
 
 
 @pytest.mark.slow
+def test_kernel_vs_ref_parity_all_modes():
+    """use_kernels(True) Pallas path == use_kernels(False) oracle path for
+    stream/index/slice, gated and gateless, on 8 fake devices."""
+    out = run_distributed_script("fsedp_kernels.py")
+    assert "KERNEL PARITY OK" in out
+
+
+@pytest.mark.slow
 def test_small_mesh_dryrun_machinery():
     out = run_distributed_script("dryrun_small.py", timeout=1800)
     assert out.count(" ok ") >= 15      # 5 archs × 3 kinds

@@ -1,7 +1,7 @@
 """Paired-load ordering + Algorithm 2 token-buffering semantics."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.policies import (QoSState, TokenBufferPolicy, expert_pairs,
                                  paired_load_order)

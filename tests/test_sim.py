@@ -2,7 +2,7 @@
 strategy orderings matching the paper's claims, rules behaviour."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.sim import (PROTOTYPE_2X2, PAPER_SPECS, ChipletSim, scaled,
                        iteration_workloads, simulate_layer)
