@@ -1,0 +1,142 @@
+"""Cost-model-vs-simulator validation sweep for the FSE-DP autotuner.
+
+For every (B, S, E, d_expert, P) point of ``autotune.VALIDATION_SWEEP``
+(low-batch decode, prefill, and batch-heavy decode regimes on the
+Table-I chiplet arrays) this bench records, per execution mode:
+
+* the analytical cost model's predicted seconds (``autotune.plan_moe``
+  with the mode forced, so micro-slices are optimized per mode), and
+* the step-level chiplet simulation (``sim.modes.simulate_mode``) as the
+  measured referee,
+
+plus the top-choice agreement fraction (the acceptance gate is >= 0.8),
+the trajectory-scheduler simulation (``sim.engine.simulate_layer``,
+strategy ``fse_dp_paired``) for cross-reference, and — unless
+``--no-measure`` — wall-clock kernel-tile timings from the measured
+autotune path on a few tiny shapes.  Emits
+``artifacts/bench/BENCH_autotune.json``; a committed copy under
+``benchmarks/baselines/`` is the CI regression baseline.
+
+Usage:
+  PYTHONPATH=src python benchmarks/autotune_bench.py [--no-measure]
+      [--out DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+D_MODEL = 512
+
+
+def _hw(P):
+    from repro.sim.hardware import scaled
+    return {2: scaled(1, 2), 4: scaled(2, 2), 8: scaled(2, 4)}[P]
+
+
+def sweep_rows():
+    from repro.configs.base import MoEConfig
+    from repro.core import autotune as at
+    from repro.sim import modes as sim_modes
+    from repro.sim.engine import simulate_layer
+    from repro.sim.hardware import ModelSpec
+    from repro.sim.workload import make_layer_workload, make_requests
+
+    rows = []
+    agree = 0
+    for (B, S, E, de, P) in at.VALIDATION_SWEEP:
+        hw = _hw(P)
+        profile = at.HardwareProfile.from_chiplet(hw)
+        spec = ModelSpec("sweep", D_MODEL, de, E, 2)
+        moe = MoEConfig(num_experts=E, top_k=2, d_expert=de)
+
+        plan = at.plan_moe(B, S, D_MODEL, moe, "swiglu", P,
+                           profile=profile, level="analytic")
+        predicted = {}
+        for mode in at.feasible_modes(B, S, P):
+            predicted[mode] = at.plan_moe(
+                B, S, D_MODEL, moe, "swiglu", P, profile=profile,
+                level="analytic", mode=mode).predicted_s
+        simulated = sim_modes.rank_modes(hw, spec, B * S, B=B, S=S)
+        sim_best = min(simulated, key=simulated.get)
+        ok = plan.mode == sim_best
+        agree += ok
+
+        # trajectory-scheduler cross-reference (same hardware model)
+        reqs = make_requests(B * S, hw.num_chiplets, seed=0)
+        wl = make_layer_workload(spec, reqs, hw.num_chiplets, 0, seed=0)
+        engine_s = simulate_layer(hw, spec, wl, "fse_dp_paired",
+                                  micro_slices=plan.micro_slices).latency
+
+        rows.append({
+            "B": B, "S": S, "E": E, "d_expert": de, "P": P,
+            "chosen": plan.mode, "micro_slices": plan.micro_slices,
+            "sim_best": sim_best, "agree": bool(ok),
+            "predicted_s": {k: round(v, 9) for k, v in predicted.items()},
+            "simulated_s": {k: round(v, 9) for k, v in simulated.items()},
+            "engine_fse_dp_s": round(engine_s, 9),
+            "plan_vmem_bytes": plan.vmem_bytes,
+        })
+        print(f"B={B:4d} S={S:4d} E={E:3d} de={de:5d} P={P} "
+              f"chosen={plan.mode:6s} sim_best={sim_best:6s} "
+              f"{'OK' if ok else 'MISS'}")
+    return rows, agree / len(rows)
+
+
+def measure_tiles():
+    """Wall-clock the measured-autotune path on tiny kernel shapes."""
+    from repro.core import autotune as at
+    out = []
+    for (E, C, d, m, act) in ((2, 8, 32, 16, "swiglu"),
+                              (4, 16, 64, 32, "swiglu"),
+                              (4, 16, 64, 32, "gelu")):
+        entry = at.measured_kernel_tiles(E, C, d, m, act, dtype_bytes=4,
+                                         reps=2)
+        out.append({"E": E, "C": C, "d": d, "m": m, "activation": act,
+                    "best_opts": entry["opts"],
+                    "measured_ms": round(entry["ms"], 4),
+                    "analytic_predicted_s": entry["analytic_s"],
+                    "xla_flops": entry.get("flops", 0.0)})
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-measure", action="store_true",
+                    help="skip wall-clock kernel-tile timing")
+    ap.add_argument("--out", default=ART)
+    args = ap.parse_args(argv)
+
+    import jax
+
+    rows, agreement = sweep_rows()
+    tiles = [] if args.no_measure else measure_tiles()
+    print(f"# mode-rank agreement: {agreement:.3f} over {len(rows)} points")
+
+    payload = {
+        "bench": "autotune_costmodel_vs_simulator",
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "d_model": D_MODEL,
+        "agreement": agreement,
+        "unix_time": int(time.time()),
+        "rows": rows,
+        "tile_measurements": tiles,
+    }
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, "BENCH_autotune.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# {len(rows)} sweep points -> {os.path.relpath(path)}")
+    return path
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Benchmark-regression gate: fresh artifacts vs committed baselines.
+
+Compares ``artifacts/bench/*.json`` (produced by this run's
+``kernel_bench.py`` / ``autotune_bench.py``) against the committed
+``benchmarks/baselines/*.json`` and exits non-zero on regression:
+
+* BENCH_autotune.json — deterministic metrics: the mode-rank agreement
+  must stay >= --min-agreement (acceptance floor 0.8), and the cost
+  model's predicted per-mode seconds must not drift slower than the
+  baseline by more than --tolerance on any sweep point (catches cost
+  model regressions exactly, no timing noise).
+* BENCH_streamed_moe.json — timing metric, compared machine-relatively:
+  each row's pallas_ms/einsum_ms ratio (both sides measured in the same
+  run, so host speed cancels) against the baseline row's ratio; FAIL if
+  the *median* relative slowdown across matched rows exceeds
+  --tolerance (median absorbs per-row CI jitter).
+
+Usage:
+  PYTHONPATH=src python benchmarks/check_regression.py \
+      [--baseline-dir benchmarks/baselines] [--current-dir artifacts/bench] \
+      [--tolerance 0.25] [--min-agreement 0.8]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_autotune(base, cur, tol, min_agreement, failures):
+    if cur["agreement"] < min_agreement:
+        failures.append(f"BENCH_autotune: agreement {cur['agreement']:.3f} "
+                        f"< floor {min_agreement}")
+    # independent drift gate: the sweep is deterministic, so losing more
+    # than one point relative to the committed baseline means the cost
+    # model genuinely changed (one point of slack tolerates a near-tie
+    # flipping under a legitimate improvement)
+    slack = 1.0 / max(1, len(cur["rows"]))
+    if cur["agreement"] < base["agreement"] - slack - 1e-9:
+        failures.append(f"BENCH_autotune: agreement regressed "
+                        f"{base['agreement']:.3f} -> {cur['agreement']:.3f} "
+                        f"(> one sweep point)")
+    base_rows = {(r["B"], r["S"], r["E"], r["d_expert"], r["P"]): r
+                 for r in base["rows"]}
+    matched = 0
+    for r in cur["rows"]:
+        key = (r["B"], r["S"], r["E"], r["d_expert"], r["P"])
+        b = base_rows.get(key)
+        if b is None:
+            continue
+        matched += 1
+        for mode, t in r["predicted_s"].items():
+            bt = b["predicted_s"].get(mode)
+            if bt and t > bt * (1 + tol):
+                failures.append(
+                    f"BENCH_autotune {key} {mode}: predicted "
+                    f"{bt:.3e}s -> {t:.3e}s (+{t / bt - 1:.0%} > {tol:.0%})")
+    if not matched:
+        failures.append("BENCH_autotune: no baseline rows matched the sweep "
+                        "— refresh benchmarks/baselines/")
+    print(f"BENCH_autotune: agreement={cur['agreement']:.3f} "
+          f"(baseline {base['agreement']:.3f}), {matched} rows matched")
+
+
+def check_streamed_moe(base, cur, tol, failures):
+    def key(r):
+        return (r["config"], r["E"], r["d_model"], r["d_expert"],
+                r["slice_div"], r["C"], r["activation"])
+
+    base_rows = {key(r): r for r in base["rows"]}
+    # gate both kernel branches: default tiles (pallas_ms) and the
+    # autotune-scheduled tiles (autotuned_ms) every model path dispatches
+    # through — each normalized by the same-run einsum time so host speed
+    # cancels
+    slowdowns = {"pallas_ms": [], "autotuned_ms": []}
+    for r in cur["rows"]:
+        b = base_rows.get(key(r))
+        if b is None or not b.get("einsum_ms"):
+            continue
+        for col in slowdowns:
+            if not b.get(col) or not r.get(col):
+                continue
+            cur_ratio = r[col] / max(r["einsum_ms"], 1e-9)
+            base_ratio = b[col] / max(b["einsum_ms"], 1e-9)
+            slowdowns[col].append(cur_ratio / max(base_ratio, 1e-9) - 1.0)
+    if not slowdowns["pallas_ms"]:
+        failures.append("BENCH_streamed_moe: no baseline rows matched — "
+                        "refresh benchmarks/baselines/")
+        return
+    for col, vals in slowdowns.items():
+        if not vals:
+            continue
+        med = statistics.median(vals)
+        print(f"BENCH_streamed_moe[{col}]: median kernel-vs-einsum slowdown "
+              f"{med:+.1%} over {len(vals)} matched rows (tolerance "
+              f"{tol:.0%})")
+        if med > tol:
+            failures.append(f"BENCH_streamed_moe[{col}]: median relative "
+                            f"slowdown {med:+.1%} exceeds {tol:.0%}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir",
+                    default=os.path.join(HERE, "baselines"))
+    ap.add_argument("--current-dir",
+                    default=os.path.join(HERE, "..", "artifacts", "bench"))
+    ap.add_argument("--tolerance", type=float, default=0.25)
+    ap.add_argument("--min-agreement", type=float, default=0.8)
+    args = ap.parse_args(argv)
+
+    failures: list = []
+    checked = 0
+    for name, fn in (("BENCH_autotune.json",
+                      lambda b, c, f: check_autotune(
+                          b, c, args.tolerance, args.min_agreement, f)),
+                     ("BENCH_streamed_moe.json",
+                      lambda b, c, f: check_streamed_moe(
+                          b, c, args.tolerance, f))):
+        bpath = os.path.join(args.baseline_dir, name)
+        cpath = os.path.join(args.current_dir, name)
+        if not os.path.exists(bpath):
+            failures.append(f"missing committed baseline {bpath}")
+            continue
+        if not os.path.exists(cpath):
+            failures.append(f"missing fresh artifact {cpath} — run the "
+                            "bench first")
+            continue
+        fn(_load(bpath), _load(cpath), failures)
+        checked += 1
+
+    if failures:
+        print(f"\nREGRESSION CHECK FAILED ({len(failures)} issue(s)):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"\nregression check OK ({checked} benches within "
+          f"{args.tolerance:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,12 +14,13 @@ from .common import emit
 _CHILD = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import functools
 import json
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.configs.base import MoEConfig
 from repro.models import moe as moe_mod
-from repro.core import fse_dp, baselines
+from repro.core import autotune, fse_dp, baselines
 from repro.parallel import meshctx
 from repro.launch.analysis import collective_bytes
 
@@ -29,6 +30,14 @@ params = moe_mod.moe_init(jax.random.PRNGKey(0), d, moe, "swiglu", jnp.bfloat16)
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 B, S = 8, 64
 x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d), jnp.bfloat16)
+
+# one scheduler for every strategy: the fse_dp row pins the paper's
+# signature stream trajectory via a forced plan; fse_dp_auto lets the
+# cost model pick mode/micro-slices/tiles for this shape
+B_grp = B // 2                       # data axis is 2-way
+stream_plan = autotune.plan_moe(B_grp, S, d, moe, "swiglu", 4,
+                                dtype_bytes=2, mode="stream")
+fse_dp_stream = functools.partial(fse_dp.fse_dp_moe_3d, plan=stream_plan)
 
 def lower(fn, w_specs):
     in_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s), w_specs),
@@ -52,7 +61,8 @@ for name, fn, specs, shard_frac in [
         ("dp_replicated", fse_dp.fse_dp_moe_3d, specs_dp, 1.0),
         ("tp", baselines.tp_moe_3d, specs_fse, 0.25),
         ("ep", baselines.ep_moe_3d, specs_ep, 0.25),
-        ("fse_dp", fse_dp.fse_dp_moe_3d, specs_fse, 0.25)]:
+        ("fse_dp", fse_dp_stream, specs_fse, 0.25),
+        ("fse_dp_auto", fse_dp.fse_dp_moe_3d, specs_fse, 0.25)]:
     compiled = lower(fn, specs)
     coll = collective_bytes(compiled.as_text())
     rows.append({"strategy": name,

@@ -3,8 +3,11 @@
 Benchmarks ``kernels.ops.streamed_moe``'s two branches — the jnp oracle
 (``use_kernels(False)``) and the Pallas micro-slice kernel — over the
 expert-FFN shapes of the config zoo, at several micro-slice widths
-(the quantity that actually streams in FSE-DP's ring).  Emits
-``BENCH_streamed_moe.json`` under artifacts/bench/.
+(the quantity that actually streams in FSE-DP's ring), plus the kernel
+with tiles chosen by the ``core.autotune`` scheduler
+(``ops.streamed_moe_autotuned`` — the same planner every model path
+dispatches through).  Emits ``BENCH_streamed_moe.json`` under
+artifacts/bench/.
 
 Usage:
   PYTHONPATH=src python benchmarks/kernel_bench.py [--quick] [--full]
@@ -29,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_config, list_configs
+from repro.core import autotune
 from repro.kernels import ops
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
@@ -107,17 +111,26 @@ def main(argv=None):
                 with ops.use_kernels(True):
                     return ops.streamed_moe(xe, wg, wu, wd, act)
 
+            def tuned_fn(xe, wg, wu, wd):
+                with ops.use_kernels(True), autotune.use_autotune("analytic"):
+                    return ops.streamed_moe_autotuned(xe, wg, wu, wd, act)
+
             t_ref = time_fn(jax.jit(ref_fn), xe, wg, wu, wd, reps=reps)
             t_pal = time_fn(jax.jit(pallas_fn), xe, wg, wu, wd, reps=reps)
+            t_tun = time_fn(jax.jit(tuned_fn), xe, wg, wu, wd, reps=reps)
+            tiles = autotune.kernel_opts_for(E, C, d, m, act, dtype_bytes=4,
+                                             level="analytic")
             row = {"config": name, "E": E, "d_model": d, "d_expert": de,
                    "slice_div": div, "m_slice": m, "C": C, "activation": act,
                    "einsum_ms": round(t_ref * 1e3, 4),
                    "pallas_ms": round(t_pal * 1e3, 4),
+                   "autotuned_ms": round(t_tun * 1e3, 4),
+                   "autotuned_tiles": tiles,
                    "speedup": round(t_ref / t_pal, 3) if t_pal else None}
             rows.append(row)
             print(f"{name:24s} E={E:<3d} d={d:<6d} m={m:<6d} C={C:<4d} {act:7s}"
                   f" einsum={row['einsum_ms']:.3f}ms pallas={row['pallas_ms']:.3f}ms"
-                  f" x{row['speedup']}")
+                  f" tuned={row['autotuned_ms']:.3f}ms x{row['speedup']}")
     if skipped:
         print(f"# skipped {skipped} rows over the {budget >> 20} MiB "
               f"weight budget (use --full / more RAM)")

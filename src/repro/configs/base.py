@@ -15,6 +15,19 @@ from typing import Optional, Tuple
 # ---------------------------------------------------------------------------
 
 
+def moe_capacity_rows(tokens: int, top_k: int, num_experts: int,
+                      capacity_factor: float) -> int:
+    """Per-expert capacity C = max(1, ceil(tokens*top_k/E*cf)).
+
+    The single source of truth for every capacity computation: the
+    executed dispatch (``models.moe`` / ``core.baselines``), the cost
+    model (``core.autotune``), and the mode simulator (``sim.modes``)
+    all delegate here so they can never disagree on C.
+    """
+    import math
+    return max(1, math.ceil(tokens * top_k / num_experts * capacity_factor))
+
+
 @dataclass(frozen=True)
 class MoEConfig:
     """Mixture-of-Experts FFN block configuration."""
@@ -32,6 +45,10 @@ class MoEConfig:
 
     def __post_init__(self):
         assert self.top_k <= self.num_experts
+
+    def capacity_rows(self, tokens: int) -> int:
+        return moe_capacity_rows(tokens, self.top_k, self.num_experts,
+                                 self.capacity_factor)
 
 
 @dataclass(frozen=True)

@@ -1,4 +1,5 @@
-from . import gating, policies
+from . import autotune, gating, policies
+from .autotune import HardwareProfile, Plan, plan_moe, use_autotune
 from .fse_dp import fse_dp_moe_3d, pick_mode
 from .baselines import ep_moe_3d, tp_moe_3d
 from .policies import paired_load_order, expert_pairs, TokenBufferPolicy

@@ -1,0 +1,613 @@
+"""Cost-model-driven trajectory autotuner for FSE-DP.
+
+The paper's scheduling contribution is *dynamic* expert-trajectory
+selection; the SPMD adaptation in ``core.fse_dp`` realizes trajectories
+as three execution modes (stream / index / slice) plus two granularity
+knobs (ring ``micro_slices`` and the Pallas kernel tile shapes).  This
+module replaces the static three-line ``pick_mode`` heuristic with an
+analytical per-mode cost model:
+
+* compute FLOPs (expert GEMMs + dispatch/combine one-hots + router),
+* interconnect bytes (ring ``ppermute`` traffic, index/slice psum
+  all-reduce, token all-gather for replicated layouts),
+* HBM/DDR traffic of the kernel's block revisits,
+* VMEM footprint of the streamed weight blocks,
+
+all parameterized by a :class:`HardwareProfile` derived from the chiplet
+simulator's :class:`~repro.sim.hardware.HardwareConfig` (or TPU-class
+constants from ``launch.analysis``).  At trace time the planner scores
+{stream, index, slice} x candidate ``micro_slices`` x kernel tile shapes
+and returns the winning :class:`Plan`; ``fse_dp_moe_3d`` dispatches on
+it.  ``pick_mode`` survives only as the zero-knowledge fallback
+(``level="off"`` or unknown hardware).
+
+An optional *measured* path times candidate kernel lowerings once
+(through ``kernels.ops``) and memoizes the winner to an on-disk JSON
+cache under ``artifacts/autotune/`` so subsequent traces are free.
+
+The model is validated against the cycle-level chiplet simulator
+(``sim.modes.simulate_mode``): ``tests/test_autotune.py`` asserts rank
+agreement on a (B, S, E, d_expert, P) sweep and
+``benchmarks/autotune_bench.py`` records predicted-vs-measured times.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import functools
+import json
+import math
+import os
+import warnings
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+MODES = ("stream", "index", "slice")
+
+# (B, S, E, d_expert, P) validation sweep shared by tests/test_autotune.py
+# and benchmarks/autotune_bench.py: low-batch decode (slice regime),
+# prefill (stream regime), and batch-heavy decode with S < P (index
+# regime), at d_model=512 on the Table-I chiplet arrays.
+VALIDATION_SWEEP: Tuple[Tuple[int, int, int, int, int], ...] = (
+    (1, 1, 16, 512, 4), (8, 1, 16, 512, 4), (4, 16, 8, 256, 4),
+    (1, 128, 16, 512, 4), (1, 2, 64, 256, 8),
+    (4, 512, 16, 512, 4), (2, 1024, 8, 1024, 2), (8, 1024, 32, 512, 8),
+    (512, 1, 32, 256, 8), (2048, 1, 16, 512, 4), (1024, 2, 64, 256, 8),
+    (16, 1, 8, 1024, 2), (3, 1, 16, 512, 4), (2, 2048, 16, 768, 4),
+)
+
+# autotune level: "off" (pick_mode + config micro_slices + kernel-default
+# tiles — the pre-autotuner behavior), "analytic" (cost-model plan, the
+# default), "measured" (analytic mode choice + wall-clock-timed tiles).
+_LEVEL = contextvars.ContextVar(
+    "repro_autotune", default=os.environ.get("REPRO_AUTOTUNE", "analytic"))
+
+
+@contextlib.contextmanager
+def use_autotune(level: str):
+    """Scope the autotune level: 'off' | 'analytic' | 'measured'."""
+    if level not in ("off", "analytic", "measured"):
+        raise ValueError(f"unknown autotune level {level!r}")
+    tok = _LEVEL.set(level)
+    try:
+        yield
+    finally:
+        _LEVEL.reset(tok)
+
+
+def autotune_level() -> str:
+    return _LEVEL.get()
+
+
+# ---------------------------------------------------------------------------
+# hardware profile
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HardwareProfile:
+    """What the cost model needs to know about one device + its links."""
+
+    name: str
+    peak_flops: float          # per-device peak FLOP/s
+    mem_bw: float              # HBM/DDR bytes/s per device
+    link_bw: float             # D2D/ICI bytes/s per device (ring neighbor)
+    link_latency: float        # seconds per ring hop (collective issue cost)
+    vmem_bytes: int            # fast-memory budget for one kernel working set
+
+    @classmethod
+    def from_chiplet(cls, hw=None) -> "HardwareProfile":
+        """Derive from the chiplet simulator's HardwareConfig (Table I)."""
+        if hw is None:
+            from repro.sim.hardware import PROTOTYPE_2X2 as hw
+        return cls(name=f"chiplet-{hw.rows}x{hw.cols}",
+                   peak_flops=hw.tops,
+                   mem_bw=hw.ddr_total / hw.num_chiplets,
+                   link_bw=hw.d2d_gbps,
+                   link_latency=hw.d2d_hop_latency,
+                   vmem_bytes=hw.buffer_bytes)
+
+    @classmethod
+    def from_tpu(cls) -> "HardwareProfile":
+        """v5e-class constants shared with ``launch.analysis``."""
+        from repro.launch import analysis
+        return cls(name="tpu-v5e", peak_flops=analysis.PEAK_FLOPS,
+                   mem_bw=analysis.HBM_BW, link_bw=analysis.ICI_BW,
+                   link_latency=1e-6, vmem_bytes=analysis.VMEM_BYTES)
+
+    @classmethod
+    def detect(cls) -> "HardwareProfile":
+        try:
+            import jax
+            if jax.default_backend() == "tpu":
+                return cls.from_tpu()
+        except Exception:  # pragma: no cover
+            pass
+        return cls.from_chiplet()
+
+
+# ---------------------------------------------------------------------------
+# plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Plan:
+    """One fully-resolved MoE execution decision."""
+
+    mode: str                          # stream | index | slice
+    micro_slices: int
+    token_tile: int = 128
+    dmodel_tile: Optional[int] = None
+    dexpert_tile: Optional[int] = None
+    predicted_s: float = 0.0
+    vmem_bytes: int = 0
+    per_mode_s: Tuple[Tuple[str, float], ...] = ()
+    source: str = "analytic"           # analytic | measured | fallback | forced
+
+    def kernel_opts(self) -> Dict[str, int]:
+        """kwargs for ``kernels.ops.streamed_moe`` (only non-defaults)."""
+        out: Dict[str, int] = {}
+        from repro.kernels.streamed_moe import DEFAULT_TOKEN_TILE
+        if self.token_tile and self.token_tile != DEFAULT_TOKEN_TILE:
+            out["token_tile"] = self.token_tile
+        if self.dmodel_tile is not None:
+            out["dmodel_tile"] = self.dmodel_tile
+        if self.dexpert_tile is not None:
+            out["dexpert_tile"] = self.dexpert_tile
+        return out
+
+    @property
+    def breakdown(self) -> Dict[str, float]:
+        return dict(self.per_mode_s)
+
+
+def _cap(tokens: int, top_k: int, E: int, cf: float) -> int:
+    from repro.configs.base import moe_capacity_rows
+    return moe_capacity_rows(tokens, top_k, E, cf)
+
+
+def feasible_modes(B: int, S: int, P: int) -> Tuple[str, ...]:
+    """Which SPMD layouts lower for this global token shape."""
+    out = []
+    if S % P == 0 and S >= P:
+        out.append("stream")
+    if (B * S) % P == 0:
+        out.append("index")
+    out.append("slice")                # always lowers (weights stationary)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# per-mode analytical cost
+# ---------------------------------------------------------------------------
+
+
+def mode_cost(mode: str, B: int, S: int, d: int, E: int, de: int,
+              top_k: int, cf: float, n_mats: int, P: int,
+              profile: HardwareProfile, micro_slices: int,
+              dtype_bytes: int = 2) -> Dict[str, float]:
+    """Predicted per-device seconds for one MoE layer under ``mode``.
+
+    Mirrors the SPMD bodies in ``core.fse_dp`` term by term:
+
+    stream — tokens seq-sharded (T/P local), weight micro-slices ring
+             over P·M ``ppermute`` steps overlapped with the grouped GEMM;
+    index  — tokens replicated, each rank takes a T/P slice, same ring,
+             plus an input all-gather and an fp32 output psum;
+    slice  — weights stationary, every rank routes/computes ALL tokens on
+             its d_expert/P slice, fp32 output psum (no ring).
+    """
+    T = B * S
+    wb = ab = dtype_bytes
+    de_loc = de / P
+    M = max(1, micro_slices)
+
+    if mode in ("stream", "index"):
+        T_loc = T / P
+        C = _cap(int(math.ceil(T_loc)), top_k, E, cf)
+        # ring covers all P slices => full d_expert on local capacity rows
+        expert_flops = 2.0 * n_mats * E * C * d * de
+        ring_bytes = n_mats * E * d * de_loc * wb * P      # P·M sends of de_loc/M
+        t_ring = ring_bytes / profile.link_bw + P * M * profile.link_latency
+        t_fill = ring_bytes / (P * M) / profile.link_bw    # pipeline fill (1 slice)
+        # ring quantization: a micro-slice must be fully resident before it
+        # streams, so the last slice's P compute steps trail the weight
+        # stream — a 1/M compute drain the slice mode (which pipelines the
+        # local shard at kernel-grid granularity) does not pay
+        t_drain = (expert_flops / profile.peak_flops) / M
+    else:
+        T_loc = T                                          # replicated routing
+        C = _cap(T, top_k, E, cf)
+        expert_flops = 2.0 * n_mats * E * C * d * de_loc   # local slice only
+        ring_bytes = 0.0
+        t_ring = 0.0
+        t_fill = 0.0
+        t_drain = 0.0
+
+    # dispatch/combine one-hot einsums + router (per local routed tokens)
+    dispatch_flops = 2.0 * T_loc * E * C * d * 2 + 2.0 * T_loc * d * E
+    t_comp = (expert_flops + dispatch_flops) / profile.peak_flops
+
+    # memory: the local weight shard streams HBM/DDR->compute once;
+    # activations stay resident (chiplet SRAM / kernel VMEM tiles)
+    hbm = n_mats * E * d * de_loc * wb
+    t_hbm = hbm / profile.mem_bw
+
+    # collective extras for replicated-token layouts (ring collectives)
+    t_gather = t_psum = 0.0
+    if mode in ("index", "slice"):
+        gather_bytes = (P - 1) / P * T * d * ab            # replicate tokens
+        psum_bytes = 2.0 * (P - 1) / P * T * d * 4         # fp32 all-reduce
+        t_gather = gather_bytes / profile.link_bw + profile.link_latency * (P - 1)
+        t_psum = psum_bytes / profile.link_bw + 2 * profile.link_latency * (P - 1)
+
+    overlapped = max(t_comp, t_ring, t_hbm + t_drain)
+    total = overlapped + t_fill + t_gather + t_psum
+    return {"total_s": total, "compute_s": t_comp, "ring_s": t_ring,
+            "hbm_s": t_hbm, "gather_s": t_gather, "psum_s": t_psum,
+            "fill_s": t_fill, "ring_bytes": ring_bytes,
+            "flops": expert_flops + dispatch_flops, "capacity": C}
+
+
+def _micro_candidates(de_loc: int, configured: int) -> List[int]:
+    """Divisors of the local slice width worth trying (+ the config value)."""
+    cands = {m for m in (1, 2, 4, 8, 16) if m <= de_loc and de_loc % m == 0}
+    if 0 < configured <= de_loc and de_loc % configured == 0:
+        cands.add(configured)
+    return sorted(cands) or [1]
+
+
+# ---------------------------------------------------------------------------
+# kernel tile scoring (VMEM footprint + HBM revisit traffic)
+# ---------------------------------------------------------------------------
+
+
+def _fit_tile(dim: int, req: int) -> int:
+    t = max(1, min(int(req), dim))
+    while dim % t:
+        t -= 1
+    return t
+
+
+def tile_vmem_bytes(Tc: int, Ti: int, Tj: int, Tk: int, gated: bool,
+                    dtype_bytes: int = 2) -> int:
+    """VMEM working set of one ``streamed_moe_kernel`` grid step.
+
+    Streamed blocks (x + weights) are double-buffered by Pallas; the
+    fp32 output block and the pre-activation scratch are not.
+    """
+    n_up = 2 if gated else 1
+    streamed = Tc * Ti * dtype_bytes + n_up * Ti * Tk * dtype_bytes \
+        + Tk * Tj * dtype_bytes
+    resident = Tc * Tj * 4 + (1 + (1 if gated else 0)) * Tc * Tk * 4
+    return 2 * streamed + resident
+
+
+def kernel_tile_cost(E: int, C: int, d: int, m: int, Tc: int, Tj: int,
+                     Tk: int, gated: bool, profile: HardwareProfile,
+                     dtype_bytes: int = 2) -> Dict[str, float]:
+    """Roofline score of one tile choice for the grid (E, C/Tc, d/Tj, m/Tk, d/Ti).
+
+    Models the kernel's real revisit pattern: up/gate GEMMs recompute once
+    per output-d tile (d/Tj), weight blocks re-stream once per token tile.
+    """
+    n_up = 2 if gated else 1
+    Ti = Tj
+    Cp = math.ceil(C / Tc) * Tc
+    flops = 2.0 * E * Cp * d * m * n_up * (d / Tj) + 2.0 * E * Cp * m * d
+    hbm = (E * Cp * d * dtype_bytes * (d / Tj) * (m / Tk)          # x refetch
+           + n_up * E * (Cp / Tc) * (d / Tj) * m * d * dtype_bytes  # w_up/gate
+           + E * (Cp / Tc) * (d / Ti) * m * d * dtype_bytes         # w_down
+           + E * Cp * d * 4 * (m / Tk))                             # out revisits
+    t = flops / profile.peak_flops + hbm / profile.mem_bw
+    return {"t": t, "flops": flops, "hbm": hbm,
+            "vmem": tile_vmem_bytes(Tc, Ti, Tj, Tk, gated, dtype_bytes)}
+
+
+def default_tiles(C: int, d: int, m: int, dtype_bytes: int = 2) -> Tuple[int, int, int]:
+    """The (Tc, Tj, Tk) the kernel picks with no explicit opts."""
+    from repro.kernels.streamed_moe import DEFAULT_TOKEN_TILE, VMEM_BLOCK_BYTES
+    Tc = min(DEFAULT_TOKEN_TILE, max(C, 1))
+    Tk = _fit_tile(m, max(1, VMEM_BLOCK_BYTES // max(1, d * dtype_bytes)))
+    return Tc, d, Tk
+
+
+def plan_kernel_tiles(E: int, C: int, d: int, m: int, activation: str,
+                      profile: Optional[HardwareProfile] = None,
+                      dtype_bytes: int = 2) -> Dict[str, object]:
+    """Score candidate (token_tile, dmodel_tile, dexpert_tile) and return
+    the winner + its predicted time and VMEM footprint.
+
+    The kernel-default tiling is always a candidate and wins ties, so the
+    analytic level only departs from today's lowering when the model says
+    the default genuinely loses (e.g. VMEM overflow forcing d_model
+    tiling, or tiny C making a 128-row token tile mostly padding).
+    """
+    profile = profile or HardwareProfile.detect()
+    gated = activation == "swiglu"
+    dTc, dTj, dTk = default_tiles(C, d, m, dtype_bytes)
+
+    tc_cands = sorted({dTc} | {t for t in (32, 64, 128, 256) if t <= max(C, 1)})
+    tk_cands = sorted({dTk} | {t for t in {m, m // 2, m // 4} if t >= 1})
+    tj_cands = sorted({dTj} | {t for t in {d, d // 2, d // 4} if t >= 1})
+
+    best = None
+    for Tc in tc_cands:
+        for tj_req in tj_cands:
+            Tj = _fit_tile(d, tj_req)
+            for tk_req in tk_cands:
+                Tk = _fit_tile(m, tk_req)
+                sc = kernel_tile_cost(E, C, d, m, Tc, Tj, Tk, gated,
+                                      profile, dtype_bytes)
+                fits = sc["vmem"] <= profile.vmem_bytes
+                is_default = (Tc, Tj, Tk) == (dTc, dTj, dTk)
+                # fitting candidates race on predicted time (default wins
+                # ties); if nothing fits, minimize the overflow instead
+                key = (not fits,
+                       sc["t"] * (1.0 - 1e-6 * is_default) if fits
+                       else sc["vmem"])
+                if best is None or key < best[0]:
+                    best = (key, (Tc, Tj, Tk), sc)
+    (_, (Tc, Tj, Tk), sc) = best
+    return {"token_tile": Tc,
+            "dmodel_tile": None if Tj == d else Tj,
+            "dexpert_tile": None if Tk == dTk else Tk,
+            "predicted_s": sc["t"], "vmem_bytes": int(sc["vmem"]),
+            "fits": sc["vmem"] <= profile.vmem_bytes}
+
+
+# ---------------------------------------------------------------------------
+# measured tile autotune (on-disk memoized)
+# ---------------------------------------------------------------------------
+
+def _repo_root() -> str:
+    here = os.path.abspath(os.path.dirname(__file__))
+    cand = os.path.dirname(os.path.dirname(os.path.dirname(here)))
+    if os.path.exists(os.path.join(cand, "pyproject.toml")):
+        return cand
+    return os.getcwd()
+
+
+def cache_dir() -> str:
+    return os.environ.get("REPRO_AUTOTUNE_CACHE",
+                          os.path.join(_repo_root(), "artifacts", "autotune"))
+
+
+_MEASURED: Dict[str, dict] = {}
+_CACHE_LOADED = False
+
+
+def _cache_path() -> str:
+    return os.path.join(cache_dir(), "kernel_tiles.json")
+
+
+def _load_cache() -> None:
+    global _CACHE_LOADED
+    if _CACHE_LOADED:
+        return
+    _CACHE_LOADED = True
+    try:
+        with open(_cache_path()) as f:
+            _MEASURED.update(json.load(f))
+    except (OSError, ValueError):
+        pass
+
+
+def _save_cache() -> None:
+    try:
+        os.makedirs(cache_dir(), exist_ok=True)
+        with open(_cache_path(), "w") as f:
+            json.dump(_MEASURED, f, indent=1, sort_keys=True)
+    except OSError:  # pragma: no cover — read-only checkout
+        pass
+
+
+def measured_kernel_tiles(E: int, C: int, d: int, m: int, activation: str,
+                          dtype_bytes: int = 2, reps: int = 3,
+                          profile: Optional[HardwareProfile] = None) -> dict:
+    """Time candidate tile lowerings of the streamed-MoE kernel once and
+    memoize the winner (keyed by backend/jax-version/shape) under
+    ``artifacts/autotune/kernel_tiles.json``.
+
+    Each cache entry also records the XLA ``cost_analysis`` flops of the
+    winning lowering (via ``launch.analysis.cost_dict``) next to the
+    measured milliseconds, so predicted-vs-measured drift is inspectable.
+    """
+    import statistics
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+    from repro.launch.analysis import cost_dict
+
+    _load_cache()
+    key = (f"{jax.default_backend()}/{jax.__version__}/"
+           f"E{E}_C{C}_d{d}_m{m}_{activation}_b{dtype_bytes}")
+    if key in _MEASURED:
+        return _MEASURED[key]
+
+    analytic = plan_kernel_tiles(E, C, d, m, activation, profile, dtype_bytes)
+    cands: List[Dict[str, int]] = [{}]                    # kernel defaults
+    opt = {k: v for k, v in analytic.items()
+           if k in ("token_tile", "dmodel_tile", "dexpert_tile") and v}
+    if opt:
+        cands.append(opt)
+    if m > 1:
+        cands.append({"dexpert_tile": max(1, m // 2)})
+
+    dt = jnp.float32 if dtype_bytes == 4 else jnp.bfloat16
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    xe = jax.random.normal(ks[0], (E, C, d), dt)
+    wu = jax.random.normal(ks[1], (E, d, m), dt) * 0.1
+    wd = jax.random.normal(ks[2], (E, m, d), dt) * 0.1
+    wg = jax.random.normal(ks[3], (E, d, m), dt) * 0.1 \
+        if activation == "swiglu" else None
+
+    rows = []
+    for opts in cands:
+        def fn(xe, wg, wu, wd, _opts=opts):
+            with kops.use_kernels(True):
+                return kops.streamed_moe(xe, wg, wu, wd, activation, **_opts)
+        jf = jax.jit(fn)
+        try:
+            compiled = jf.lower(xe, wg, wu, wd).compile()
+            flops = float(cost_dict(compiled).get("flops", 0.0))
+            jax.block_until_ready(jf(xe, wg, wu, wd))
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(jf(xe, wg, wu, wd))
+                ts.append(time.perf_counter() - t0)
+            rows.append({"opts": opts, "ms": statistics.median(ts) * 1e3,
+                         "flops": flops})
+        except Exception as e:  # pragma: no cover — candidate fails to lower
+            rows.append({"opts": opts, "ms": float("inf"), "error": str(e)})
+
+    best = min(rows, key=lambda r: r["ms"])
+    entry = {"opts": best["opts"], "ms": best["ms"],
+             "flops": best.get("flops", 0.0),
+             "analytic_s": analytic["predicted_s"],
+             "candidates": [{k: v for k, v in r.items() if k != "flops"}
+                            for r in rows]}
+    _MEASURED[key] = entry
+    _save_cache()
+    return entry
+
+
+@functools.lru_cache(maxsize=4096)
+def _kernel_opts_cached(E: int, C: int, d: int, m: int, activation: str,
+                        dtype_bytes: int, level: str,
+                        profile: HardwareProfile) -> Tuple[Tuple[str, int], ...]:
+    if level == "off":
+        return ()
+    if level == "measured":
+        entry = measured_kernel_tiles(E, C, d, m, activation, dtype_bytes,
+                                      profile=profile)
+        return tuple(sorted((k, v) for k, v in entry["opts"].items() if v))
+    tiles = plan_kernel_tiles(E, C, d, m, activation, profile, dtype_bytes)
+    return tuple(sorted(
+        (k, v) for k, v in tiles.items()
+        if k in ("token_tile", "dmodel_tile", "dexpert_tile") and v))
+
+
+def kernel_opts_for(E: int, C: int, d: int, m: int, activation: str,
+                    dtype_bytes: int = 2, *, level: Optional[str] = None,
+                    profile: Optional[HardwareProfile] = None) -> Dict[str, int]:
+    """Tile kwargs for one ``streamed_moe`` call shape under the ambient
+    (or given) autotune level.  ``{}`` at level 'off' — kernel defaults."""
+    level = level or autotune_level()
+    profile = profile or HardwareProfile.detect()
+    return dict(_kernel_opts_cached(int(E), int(C), int(d), int(m),
+                                    activation, int(dtype_bytes), level,
+                                    profile))
+
+
+# ---------------------------------------------------------------------------
+# the planner
+# ---------------------------------------------------------------------------
+
+
+def fallback_plan(B: int, S: int, P: int, micro_slices: int) -> Plan:
+    """Zero-knowledge fallback: the original ``pick_mode`` heuristic —
+    first feasible mode in stream > index > slice priority order — with
+    the statically-configured micro-slice count and kernel-default tiles."""
+    return Plan(mode=feasible_modes(B, S, P)[0], micro_slices=micro_slices,
+                source="fallback")
+
+
+@functools.lru_cache(maxsize=4096)
+def _plan_moe_cached(B: int, S: int, d: int, E: int, de: int, top_k: int,
+                     cf: float, n_mats: int, micro_cfg: int, P: int,
+                     activation: str, profile: HardwareProfile,
+                     dtype_bytes: int, level: str,
+                     force_mode: Optional[str]) -> Plan:
+    if level == "off" and force_mode is None:
+        return fallback_plan(B, S, P, micro_cfg)
+
+    feasible = feasible_modes(B, S, P)
+    if force_mode is not None:
+        if force_mode not in feasible:
+            raise ValueError(f"mode {force_mode!r} infeasible for "
+                             f"B={B} S={S} P={P} (feasible: {feasible})")
+        feasible = (force_mode,)
+
+    de_loc = max(1, de // P)
+    best: Optional[Tuple[float, str, int, Dict[str, float]]] = None
+    per_mode: Dict[str, float] = {}
+    for mode in feasible:
+        mode_best: Optional[Tuple[float, int]] = None
+        micro_cands = _micro_candidates(de_loc, micro_cfg) \
+            if mode in ("stream", "index") else [1]
+        for M in micro_cands:
+            c = mode_cost(mode, B, S, d, E, de, top_k, cf, n_mats, P,
+                          profile, M, dtype_bytes)
+            if mode_best is None or c["total_s"] < mode_best[0]:
+                mode_best = (c["total_s"], M)
+        per_mode[mode] = mode_best[0]
+        if best is None or mode_best[0] < best[0]:
+            best = (mode_best[0], mode, mode_best[1], per_mode)
+    total_s, mode, M, _ = best
+
+    # tile selection for the winning plan's kernel shape
+    T_loc = (B * S) // P if mode in ("stream", "index") else B * S
+    C = _cap(max(1, T_loc), top_k, E, cf)
+    m_step = max(1, de_loc // M) if mode in ("stream", "index") else de_loc
+    if level == "measured":
+        entry = measured_kernel_tiles(E, C, d, m_step, activation,
+                                      dtype_bytes, profile=profile)
+        opts = dict(entry["opts"])
+        tiles = plan_kernel_tiles(E, C, d, m_step, activation, profile,
+                                  dtype_bytes)
+        vmem = tiles["vmem_bytes"]
+        source = "measured"
+    else:
+        tiles = plan_kernel_tiles(E, C, d, m_step, activation, profile,
+                                  dtype_bytes)
+        opts = {k: v for k, v in tiles.items()
+                if k in ("token_tile", "dmodel_tile", "dexpert_tile")}
+        vmem = tiles["vmem_bytes"]
+        source = "analytic"
+
+    from repro.kernels.streamed_moe import DEFAULT_TOKEN_TILE
+    return Plan(mode=mode, micro_slices=M,
+                token_tile=opts.get("token_tile", DEFAULT_TOKEN_TILE),
+                dmodel_tile=opts.get("dmodel_tile"),
+                dexpert_tile=opts.get("dexpert_tile"),
+                predicted_s=total_s, vmem_bytes=vmem,
+                per_mode_s=tuple(sorted(per_mode.items())),
+                source=source if force_mode is None else "forced")
+
+
+def plan_moe(B: int, S: int, d_model: int, moe, activation: str, P: int,
+             *, profile: Optional[HardwareProfile] = None,
+             dtype_bytes: int = 2, level: Optional[str] = None,
+             mode: Optional[str] = None) -> Plan:
+    """Score all feasible (mode, micro_slices, tiles) and return the winner.
+
+    ``moe`` is a :class:`repro.configs.base.MoEConfig`; ``P`` the model-axis
+    size.  ``mode`` forces a specific execution mode (still optimizing the
+    remaining knobs) — used by benchmarks and the parity tests.  Pure
+    Python — call freely at trace time; results are memoized.
+    """
+    level = level or autotune_level()
+    profile = profile or HardwareProfile.detect()
+    n_mats = 3 if activation == "swiglu" else 2
+    return _plan_moe_cached(int(B), int(S), int(d_model),
+                            int(moe.num_experts), int(moe.d_expert),
+                            int(moe.top_k), float(moe.capacity_factor),
+                            n_mats, int(moe.micro_slices), int(P),
+                            activation, profile, int(dtype_bytes), level,
+                            mode)
+
+
+def pick_mode(B: int, S: int, P_: int) -> str:
+    """Deprecated: the zero-knowledge mode heuristic.  Kept as the cost
+    model's fallback (``level='off'`` / unknown hardware); new callers
+    should use :func:`plan_moe` and read ``plan.mode``."""
+    warnings.warn("core.autotune.pick_mode / core.fse_dp.pick_mode is "
+                  "deprecated; use autotune.plan_moe(...).mode",
+                  DeprecationWarning, stacklevel=2)
+    return fallback_plan(B, S, P_, 1).mode

@@ -13,6 +13,12 @@ are **replicated** on the model axis, partial outputs all-reduced
 
 DP (replicated experts) exists only as an accounting mode in the
 benchmarks — it needs no code beyond unsharded weights.
+
+Both baselines dispatch their expert GEMMs through
+``fse_dp._expert_partial`` with no explicit tile opts, which routes to
+``kernels.ops.streamed_moe_autotuned`` — the same cost-model tile
+scheduler (``core.autotune``) the FSE-DP modes use, so kernel-level
+comparisons between strategies are tile-for-tile fair.
 """
 from __future__ import annotations
 
@@ -29,8 +35,7 @@ from .fse_dp import _expert_partial, shard_map, pmean_all
 
 
 def _capacity(T_loc: int, moe: MoEConfig) -> int:
-    import math
-    return max(1, math.ceil(T_loc * moe.top_k / moe.num_experts * moe.capacity_factor))
+    return moe.capacity_rows(T_loc)
 
 
 # ---------------------------------------------------------------------------

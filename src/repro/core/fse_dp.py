@@ -85,16 +85,21 @@ def pmean_all(x, axes):
 # local grouped-GEMM over one micro-slice
 # ---------------------------------------------------------------------------
 
-def _expert_partial(xe, w_g, w_u, w_d, activation):
+def _expert_partial(xe, w_g, w_u, w_d, activation, kopts=None):
     """xe: (E,C,d); w_g/w_u: (E,d,m); w_d: (E,m,d) -> partial y (E,C,d) fp32.
 
     Dispatches through ``kernels.ops.streamed_moe``: the Pallas micro-slice
     kernel when kernels are enabled, the jnp oracle under
-    ``use_kernels(False)`` / REPRO_NO_PALLAS."""
-    return kops.streamed_moe(xe, w_g, w_u, w_d, activation)
+    ``use_kernels(False)`` / REPRO_NO_PALLAS.  ``kopts`` is a tuple of
+    (name, value) tile kwargs from an autotune :class:`Plan`; ``None``
+    consults the ambient-level tile planner for this call's shape."""
+    if kopts is None:
+        return kops.streamed_moe_autotuned(xe, w_g, w_u, w_d, activation)
+    return kops.streamed_moe(xe, w_g, w_u, w_d, activation, **dict(kopts))
 
 
-def _ring_stream(xe, w_g, w_u, w_d, activation, axis, P_, micro_slices):
+def _ring_stream(xe, w_g, w_u, w_d, activation, axis, P_, micro_slices,
+                 kopts=None):
     """Accumulate full expert outputs for local dispatched tokens ``xe``
     while streaming weight micro-slices around the ``axis`` ring.
 
@@ -127,7 +132,7 @@ def _ring_stream(xe, w_g, w_u, w_d, activation, axis, P_, micro_slices):
             ng = jax.lax.ppermute(cg, axis, ring) if cg is not None else None
             nu = jax.lax.ppermute(cu, axis, ring)
             nd = jax.lax.ppermute(cd, axis, ring)
-            acc = acc + _expert_partial(xe, cg, cu, cd, activation)
+            acc = acc + _expert_partial(xe, cg, cu, cd, activation, kopts)
             return (acc, (ng, nu, nd)), None
 
         (acc, _), _ = jax.lax.scan(step, (acc, cur), None, length=P_)
@@ -155,20 +160,23 @@ def _dispatch(x2d, routing, moe):
     return xe, comb
 
 
-def _local_moe_stream(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes):
+def _local_moe_stream(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_,
+                      pm_axes, micro_slices=None, kopts=None):
     """x: (B_loc, S_loc, d) — tokens stationary, weights stream."""
     B, S, d = x.shape
     x2d = x.reshape(B * S, d)
     routing = gating.route({"w_router": wr}, x2d, top_k=moe.top_k)
     xe, combine = _dispatch(x2d, routing, moe)
-    ye = _ring_stream(xe, w_g, w_u, w_d, activation, axis, P_, moe.micro_slices)
+    ye = _ring_stream(xe, w_g, w_u, w_d, activation, axis, P_,
+                      micro_slices or moe.micro_slices, kopts)
     y = combine(ye.reshape(moe.num_experts, -1, d))
     aux = gating.aux_load_balance_loss(routing, moe.num_experts)
     aux = pmean_all(aux, pm_axes)
     return y.reshape(B, S, d).astype(x.dtype), aux
 
 
-def _local_moe_index(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes):
+def _local_moe_index(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_,
+                     pm_axes, micro_slices=None, kopts=None):
     """x replicated over ``axis``: each rank handles a 1/P token slice,
     streams the weights, then all-gathers the outputs."""
     B, S, d = x.shape
@@ -179,7 +187,8 @@ def _local_moe_index(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes
     x_loc = jax.lax.dynamic_slice_in_dim(x2d, r * T_loc, T_loc, 0)
     routing = gating.route({"w_router": wr}, x_loc, top_k=moe.top_k)
     xe, combine = _dispatch(x_loc, routing, moe)
-    ye = _ring_stream(xe, w_g, w_u, w_d, activation, axis, P_, moe.micro_slices)
+    ye = _ring_stream(xe, w_g, w_u, w_d, activation, axis, P_,
+                      micro_slices or moe.micro_slices, kopts)
     y_loc = combine(ye.reshape(moe.num_experts, -1, d))
     # scatter-into-zeros + psum == all-gather, but provably replicated
     # under shard_map's varying-axes checker
@@ -190,14 +199,15 @@ def _local_moe_index(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes
     return y.reshape(B, S, d), aux
 
 
-def _local_moe_slice(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes):
+def _local_moe_slice(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_,
+                     pm_axes, micro_slices=None, kopts=None):
     """Tiny-token fallback (paper Fig. 3(b) regime): weights stationary,
     every rank computes its d_expert slice for all tokens, psum combine."""
     B, S, d = x.shape
     x2d = x.reshape(B * S, d)
     routing = gating.route({"w_router": wr}, x2d, top_k=moe.top_k)
     xe, combine = _dispatch(x2d, routing, moe)
-    ye = _expert_partial(xe, w_g, w_u, w_d, activation)
+    ye = _expert_partial(xe, w_g, w_u, w_d, activation, kopts)
     y = combine(ye)
     y = jax.lax.psum(y, axis)
     aux = gating.aux_load_balance_loss(routing, moe.num_experts)
@@ -209,17 +219,25 @@ def _local_moe_slice(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes
 # public entry
 # ---------------------------------------------------------------------------
 
-def pick_mode(B: int, S: int, P_: int) -> str:
-    if S % P_ == 0 and S >= P_:
-        return "stream"
-    if (B * S) % P_ == 0:
-        return "index"
-    return "slice"
+# deprecated zero-knowledge mode heuristic — kept as the historical export;
+# survives as the fallback of the cost-model autotuner (autotune.fallback_plan)
+from .autotune import pick_mode  # noqa: E402
 
 
-def fse_dp_moe_3d(params, x, moe: MoEConfig, activation, *, axis="model"):
+def fse_dp_moe_3d(params, x, moe: MoEConfig, activation, *, axis="model",
+                  plan=None):
     """x: (B, S, d) global. Returns (y, aux). Falls back to the
-    single-device capacity path when no model-parallel mesh is active."""
+    single-device capacity path when no model-parallel mesh is active.
+
+    Execution mode, ring micro-slice count, and kernel tile shapes come
+    from a ``core.autotune.Plan``: pass one explicitly (forced mode), or
+    leave ``plan=None`` to let the cost-model planner score
+    {stream, index, slice} x micro_slices x tiles for this shape at the
+    ambient autotune level.  Level 'off' applies the legacy static
+    heuristic — evaluated on the per-model-group batch (B/data-axis),
+    which the shard_map bodies actually see, not the global B the old
+    ``pick_mode`` call used; for shapes where those differ the per-group
+    choice is the one whose divisibility requirements actually hold."""
     mesh = meshctx.get_mesh()
     P_ = 1 if mesh is None or axis not in mesh.axis_names else mesh.shape[axis]
     if P_ == 1:
@@ -231,14 +249,21 @@ def fse_dp_moe_3d(params, x, moe: MoEConfig, activation, *, axis="model"):
         return y.reshape(shape), gating.aux_load_balance_loss(routing, moe.num_experts)
 
     B, S, d = x.shape
-    mode = pick_mode(B, S, P_)
-    body = {"stream": _local_moe_stream,
-            "index": _local_moe_index,
-            "slice": _local_moe_slice}[mode]
     batch = meshctx.batch_axes(mesh, axis)
     import numpy as _np
     bsz = int(_np.prod([mesh.shape[a] for a in batch])) if batch else 1
     b_ax = batch if (batch and B % bsz == 0) else None
+    B_grp = B // bsz if b_ax else B         # tokens within one model group
+
+    if plan is None:
+        from . import autotune
+        plan = autotune.plan_moe(B_grp, S, d, moe, activation, P_,
+                                 dtype_bytes=jnp.dtype(x.dtype).itemsize)
+    mode = plan.mode
+    kopts = tuple(sorted(plan.kernel_opts().items()))
+    body = {"stream": _local_moe_stream,
+            "index": _local_moe_index,
+            "slice": _local_moe_slice}[mode]
 
     x_spec = P(b_ax, axis if mode == "stream" else None, None)
     specs_in = (
@@ -250,7 +275,9 @@ def fse_dp_moe_3d(params, x, moe: MoEConfig, activation, *, axis="model"):
     )
     specs_out = (x_spec, P())
 
-    fn = functools.partial(body, moe=moe, activation=activation, axis=axis, P_=P_, pm_axes=tuple(mesh.axis_names))
+    fn = functools.partial(body, moe=moe, activation=activation, axis=axis,
+                           P_=P_, pm_axes=tuple(mesh.axis_names),
+                           micro_slices=plan.micro_slices, kopts=kopts)
     w_g = params.get("w_gate")
     if w_g is None:
         # relu2/gelu experts: no gate projection; reuse w_up spec slot

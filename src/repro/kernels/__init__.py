@@ -1,4 +1,4 @@
 from . import ops, ref
 from . import ops as flash_ops   # alias used by models.attention
 from . import ops as ssd_ops     # alias used by models.mamba2
-from .ops import streamed_moe, flash_attention, ssd_intra_chunk, use_kernels, kernels_enabled
+from .ops import streamed_moe, streamed_moe_autotuned, flash_attention, ssd_intra_chunk, use_kernels, kernels_enabled

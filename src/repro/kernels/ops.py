@@ -79,6 +79,27 @@ def streamed_moe(xe, w_g, w_u, w_d, activation: str, **kw):
     return _streamed_moe_diff(activation, opts, xe, w_g, w_u, w_d)
 
 
+def streamed_moe_autotuned(xe, w_g, w_u, w_d, activation: str):
+    """``streamed_moe`` with tile kwargs chosen by the ``core.autotune``
+    planner for this call's (E, C, d, m) shape, honoring the ambient
+    autotune level — ``off`` (kernel defaults, the pre-autotuner
+    lowering), ``analytic`` (cost-model tiles), or ``measured``
+    (wall-clock-timed tiles memoized under ``artifacts/autotune/``).
+
+    This is the one scheduler every expert-FFN path dispatches through:
+    the FSE-DP ring step, the EP/TP baselines, and the single-device
+    capacity path."""
+    opts = {}
+    if kernels_enabled():
+        from repro.core import autotune
+        E, C, d = xe.shape
+        m = w_u.shape[-1]
+        opts = autotune.kernel_opts_for(
+            E, C, d, m, activation,
+            dtype_bytes=jax.numpy.dtype(w_u.dtype).itemsize)
+    return streamed_moe(xe, w_g, w_u, w_d, activation, **opts)
+
+
 def flash_attention(q, k, v, **kw):
     if kernels_enabled():
         return flash_attention_kernel(q, k, v, **kw)

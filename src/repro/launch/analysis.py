@@ -15,6 +15,7 @@ from typing import Dict
 PEAK_FLOPS = 197e12          # bf16 FLOP/s
 HBM_BW = 819e9               # bytes/s
 ICI_BW = 50e9                # bytes/s per link
+VMEM_BYTES = 16 * 2 ** 20    # per-core fast memory (kernel working-set budget)
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -38,6 +39,15 @@ def cost_dict(compiled) -> Dict[str, float]:
     if isinstance(cost, (list, tuple)):
         cost = cost[0] if cost else {}
     return dict(cost)
+
+
+def lowering_cost(fn, *args) -> Dict[str, float]:
+    """Lower+compile ``fn`` on ``args`` and return its normalized XLA cost
+    dict — the predicted-side record of the measured-autotune cache (the
+    autotuner stores these next to wall-clock times per tile candidate)."""
+    import jax
+    compiled = jax.jit(fn).lower(*args).compile()
+    return cost_dict(compiled)
 
 
 def _shape_bytes(shape_str: str) -> int:

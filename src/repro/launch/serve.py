@@ -20,6 +20,11 @@ def main():
     ap.add_argument("--slack", type=float, default=0.0)
     ap.add_argument("--theta-min", type=int, default=2)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--autotune", choices=("off", "analytic", "measured"),
+                    default="analytic",
+                    help="MoE trajectory/tile scheduler (core.autotune); "
+                         "'measured' times kernel candidates once and caches "
+                         "them under artifacts/autotune/")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -35,7 +40,8 @@ def main():
     params = api.init_params(jax.random.PRNGKey(args.seed), cfg)
     eng = Engine(params, cfg, ServeConfig(
         max_batch=args.max_batch, max_ctx=args.prompt_len + args.max_new + 8,
-        buffering_slack=args.slack, theta_min=args.theta_min, seed=args.seed))
+        buffering_slack=args.slack, theta_min=args.theta_min,
+        autotune=args.autotune, seed=args.seed))
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()

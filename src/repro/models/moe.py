@@ -74,9 +74,7 @@ def moe_dense(params, x2d, routing, activation):
 # ---------------------------------------------------------------------------
 
 def capacity_of(T, moe: MoEConfig):
-    import math
-    c = math.ceil(T * moe.top_k / moe.num_experts * moe.capacity_factor)
-    return max(c, 1)
+    return moe.capacity_rows(T)
 
 
 def dispatch_masks(routing, T, E, C):
@@ -96,11 +94,12 @@ def dispatch_masks(routing, T, E, C):
 
 
 def _expert_ffn(params, xe, activation):
-    """(E,C,d) -> (E,C,d) fp32 via the ``kernels.ops.streamed_moe`` dispatch
-    layer (Pallas micro-slice kernel, or the jnp oracle under
-    ``use_kernels(False)``)."""
-    return kops.streamed_moe(xe, params.get("w_gate"), params["w_up"],
-                             params["w_down"], activation)
+    """(E,C,d) -> (E,C,d) fp32 via the ``kernels.ops.streamed_moe_autotuned``
+    dispatch layer (Pallas micro-slice kernel with planner-chosen tiles, or
+    the jnp oracle under ``use_kernels(False)``)."""
+    return kops.streamed_moe_autotuned(xe, params.get("w_gate"),
+                                       params["w_up"], params["w_down"],
+                                       activation)
 
 
 def moe_capacity(params, x2d, routing, moe: MoEConfig, activation):

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import gating
+from repro.core import autotune, gating
 from repro.core.policies import TokenBufferPolicy, paired_load_order
 from repro.models import api, moe as moe_mod, transformer
 from repro.models.layers import apply_norm
@@ -43,6 +43,7 @@ class ServeConfig:
     theta_min: int = 2
     n_threshold: Optional[int] = None   # default derived from slack
     moe_impl: str = "capacity"
+    autotune: str = "analytic"          # off | analytic | measured (core.autotune)
     temperature: float = 0.0            # 0 = greedy
     seed: int = 0
 
@@ -104,9 +105,10 @@ class Engine:
         slot = self.free_slots.pop(0)
         rid = f"req{next(self._rid)}"
         tokens = jnp.asarray(prompt, jnp.int32)[None]
-        logits, caches1 = api.prefill_fn(self.params, {"tokens": tokens}, self.cfg,
-                                         self.scfg.max_ctx,
-                                         moe_impl=self.scfg.moe_impl)
+        with autotune.use_autotune(self.scfg.autotune):
+            logits, caches1 = api.prefill_fn(self.params, {"tokens": tokens},
+                                             self.cfg, self.scfg.max_ctx,
+                                             moe_impl=self.scfg.moe_impl)
         # merge per-request caches into the batched slot
         def merge(big, small):
             if not hasattr(small, "ndim") or small.ndim < 2:
@@ -283,8 +285,9 @@ class Engine:
             return x
         h = apply_norm(cfg.norm, slot_params["norm2"], x)
         if ffn_kind == "moe":
-            h = moe_mod.moe_block(slot_params["moe"], h, cfg.moe, cfg.activation,
-                                  impl=self.scfg.moe_impl)
+            with autotune.use_autotune(self.scfg.autotune):
+                h = moe_mod.moe_block(slot_params["moe"], h, cfg.moe,
+                                      cfg.activation, impl=self.scfg.moe_impl)
         else:
             h = ffn(slot_params["ffn"], h, cfg.activation)
         return jnp.where(mask[:, None, None], x + h, x)

@@ -2,3 +2,4 @@ from .hardware import HardwareConfig, ModelSpec, PROTOTYPE_2X2, PAPER_SPECS, sca
 from .workload import LayerWorkload, Request, iteration_workloads, make_requests, make_layer_workload
 from .engine import ChipletSim, LayerResult, simulate_layer, simulate_naive_fsedp
 from .e2e import E2EResult, run_e2e
+from .modes import ModeResult, rank_modes, simulate_mode

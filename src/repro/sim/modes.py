@@ -1,0 +1,176 @@
+"""Step-level chiplet simulation of the three FSE-DP *SPMD* modes.
+
+``sim.engine`` simulates the paper's trajectory scheduler at micro-slice
+event granularity; this module simulates the three shard_map execution
+modes of ``core.fse_dp`` (stream / index / slice) on the same
+:class:`~repro.sim.hardware.HardwareConfig`, so the analytical cost
+model in ``core.autotune`` has an independent, discrete referee:
+
+* stream — tokens seq-sharded, weight micro-slices ``ppermute`` around
+  the P-ring; per ring step each chiplet forwards the resident slice
+  (async, port-serialized) while computing on it; DDR streams the local
+  shard in micro-slice granules that the first pass consumes;
+* index  — identical ring, but tokens are replicated: add the input
+  all-gather and the fp32 output all-reduce (ring collectives);
+* slice  — weights stationary; every chiplet routes ALL tokens against
+  its d_expert/P slice, then the fp32 partial outputs are all-reduced.
+
+The event structure (per-chiplet busy time, per-link transfer chains,
+pipeline fill, DDR overlap) is deliberately *not* closed-form, so rank
+agreement between ``autotune.mode_cost`` and ``simulate_mode`` is a
+meaningful check rather than an identity.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+from .hardware import HardwareConfig, ModelSpec
+
+
+@dataclass(frozen=True)
+class ModeResult:
+    mode: str
+    latency: float
+    compute_s: float            # per-chiplet mean busy compute seconds
+    ring_bytes: float           # per-chiplet ppermute traffic
+    collective_s: float         # gather + psum time (index/slice extras)
+    ddr_bytes: float
+
+
+def _capacity(tokens: int, spec: ModelSpec, capacity_factor: float) -> int:
+    from repro.configs.base import moe_capacity_rows
+    return moe_capacity_rows(tokens, spec.top_k, spec.num_experts,
+                             capacity_factor)
+
+
+def _ring_hop_time(hw: HardwareConfig, src: int, nbytes: float) -> float:
+    dst = (src + 1) % hw.num_chiplets
+    hops = max(1, hw.hops(src, dst))
+    return nbytes / hw.d2d_gbps + hops * hw.d2d_hop_latency
+
+
+def _allreduce_time(hw: HardwareConfig, nbytes_per_chip: float) -> float:
+    """Ring all-reduce: 2(P-1) steps of 1/P-sized chunks."""
+    P = hw.num_chiplets
+    if P <= 1:
+        return 0.0
+    chunk = nbytes_per_chip / P
+    step = max(_ring_hop_time(hw, c, chunk) for c in range(P))
+    return 2 * (P - 1) * step
+
+
+def _allgather_time(hw: HardwareConfig, nbytes_per_chip: float) -> float:
+    P = hw.num_chiplets
+    if P <= 1:
+        return 0.0
+    chunk = nbytes_per_chip / P
+    step = max(_ring_hop_time(hw, c, chunk) for c in range(P))
+    return (P - 1) * step
+
+
+def simulate_mode(hw: HardwareConfig, spec: ModelSpec, mode: str,
+                  tokens: int, *, micro_slices: int = 1,
+                  capacity_factor: float = 1.25,
+                  act_bytes: Optional[int] = None) -> ModeResult:
+    """Latency of one MoE layer executed in one FSE-DP SPMD mode.
+
+    ``tokens`` is the global token count of the iteration (B*S); tokens
+    split uniformly over chiplets, matching the seq-sharded layout.
+    """
+    P = hw.num_chiplets
+    E, d, de = spec.num_experts, spec.d_model, spec.d_expert
+    wb = hw.bytes_per_param
+    ab = act_bytes if act_bytes is not None else hw.bytes_per_act
+    de_loc = de / P
+    n_mats = spec.n_mats
+
+    if mode not in ("stream", "index", "slice"):
+        raise ValueError(mode)
+
+    # ---- per-chiplet routed capacity rows --------------------------------
+    if mode in ("stream", "index"):
+        T_loc = tokens / P
+        C = _capacity(max(1, math.ceil(T_loc)), spec, capacity_factor)
+    else:
+        T_loc = tokens
+        C = _capacity(max(1, tokens), spec, capacity_factor)
+
+    # dispatch/combine one-hots + router, charged as compute on every chip
+    dispatch_flops = 2.0 * T_loc * E * C * d * 2 + 2.0 * T_loc * d * E
+    ddr_shard = n_mats * E * d * de_loc * wb          # local weight shard
+
+    if mode == "slice":
+        flops = 2.0 * n_mats * E * C * d * de_loc + dispatch_flops
+        t_comp = flops / hw.tops
+        t_ddr = ddr_shard / (hw.ddr_total / P)
+        t_gather = _allgather_time(hw, tokens * d * ab)
+        t_psum = _allreduce_time(hw, tokens * d * 4)
+        lat = t_gather + max(t_comp, t_ddr) + t_psum
+        return ModeResult("slice", lat, t_comp, 0.0, t_gather + t_psum,
+                          ddr_shard * P)
+
+    # ---- stream/index: discrete ring of P steps x M micro-slices ---------
+    M = max(1, min(micro_slices, int(de_loc) or 1))
+    slice_de = de_loc / M
+    slice_bytes = n_mats * E * d * slice_de * wb
+    comp_step = (2.0 * n_mats * E * C * d * slice_de
+                 + dispatch_flops / (P * M)) / hw.tops
+
+    # DDR streams the local shard micro-slice by micro-slice; slice m of
+    # the first ring pass cannot start before its granule has landed
+    ddr_rate = hw.ddr_total / P
+    ddr_done = [(m + 1) * slice_bytes / ddr_rate for m in range(M)]
+
+    busy = np.zeros(P)
+    port_free = np.zeros(P)
+    ring_bytes = 0.0
+    for m in range(M):
+        arrive = np.full(P, ddr_done[m])
+        for s in range(P):
+            send_done = np.zeros(P)
+            for c in range(P):
+                start = max(busy[c], arrive[c])
+                if s < P - 1:        # forward first (async), then compute
+                    t0 = max(start, port_free[c])
+                    send_done[c] = t0 + _ring_hop_time(hw, c, slice_bytes)
+                    port_free[c] = send_done[c]
+                    ring_bytes += slice_bytes
+                busy[c] = start + comp_step
+            arrive = np.roll(send_done, 1)
+    lat = float(busy.max())
+
+    t_gather = t_psum = 0.0
+    if mode == "index":
+        t_gather = _allgather_time(hw, tokens * d * ab)
+        t_psum = _allreduce_time(hw, tokens * d * 4)
+        lat = t_gather + lat + t_psum
+
+    return ModeResult(mode, lat, float(busy.mean()), ring_bytes / P,
+                      t_gather + t_psum, ddr_shard * P)
+
+
+def rank_modes(hw: HardwareConfig, spec: ModelSpec, tokens: int, *,
+               B: int, S: int, micro_slices: Optional[int] = None,
+               capacity_factor: float = 1.25) -> Dict[str, float]:
+    """Simulated latency for every *feasible* mode of the (B, S) shape.
+
+    With ``micro_slices=None`` each ring mode is simulated at its own best
+    micro-slice count (mirroring the planner, which also optimizes M per
+    mode) so the comparison is schedule-vs-schedule, not knob-vs-knob.
+    """
+    from repro.core.autotune import _micro_candidates, feasible_modes
+    P = hw.num_chiplets
+    de_loc = max(1, spec.d_expert // P)
+    out = {}
+    for mode in feasible_modes(B, S, P):
+        cands = [micro_slices] if micro_slices or mode == "slice" \
+            else _micro_candidates(de_loc, 0)
+        out[mode] = min(
+            simulate_mode(hw, spec, mode, tokens, micro_slices=m or 1,
+                          capacity_factor=capacity_factor).latency
+            for m in cands)
+    return out

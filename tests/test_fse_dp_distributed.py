@@ -26,6 +26,15 @@ def test_kernel_vs_ref_parity_all_modes():
 
 
 @pytest.mark.slow
+def test_plan_driven_dispatch_bit_identical():
+    """For each of stream/index/slice, fse_dp_moe_3d(plan=...) is bit-
+    identical to a hand-forced shard_map of the same body, and the
+    level='off' fallback reproduces the legacy static dispatch."""
+    out = run_distributed_script("fsedp_autotune.py")
+    assert "AUTOTUNE PLAN PARITY OK" in out
+
+
+@pytest.mark.slow
 def test_small_mesh_dryrun_machinery():
     out = run_distributed_script("dryrun_small.py", timeout=1800)
     assert out.count(" ok ") >= 15      # 5 archs × 3 kinds
