@@ -14,6 +14,11 @@ Compares ``artifacts/bench/*.json`` (produced by this run's
   run, so host speed cancels) against the baseline row's ratio; FAIL if
   the *median* relative slowdown across matched rows exceeds
   --tolerance (median absorbs per-row CI jitter).
+* BENCH_moe_strategies.json — deterministic metrics: the cross-family
+  ``auto`` planner must pick the same family as the baseline, and each
+  strategy row's HLO collective bytes must stay within --tolerance
+  (byte counts are exact per jax version, so drift means the lowering
+  or the registry dispatch genuinely changed).
 
 Usage:
   PYTHONPATH=src python benchmarks/check_regression.py \
@@ -108,6 +113,32 @@ def check_streamed_moe(base, cur, tol, failures):
                             f"slowdown {med:+.1%} exceeds {tol:.0%}")
 
 
+def check_moe_strategies(base, cur, tol, failures):
+    if cur.get("auto_family") != base.get("auto_family"):
+        failures.append(f"BENCH_moe_strategies: auto planner family "
+                        f"changed {base.get('auto_family')} -> "
+                        f"{cur.get('auto_family')} — refresh the baseline "
+                        f"if intentional")
+    base_rows = {r["strategy"]: r for r in base["rows"]}
+    matched = 0
+    for r in cur["rows"]:
+        b = base_rows.get(r["strategy"])
+        if b is None:
+            continue
+        matched += 1
+        for col in ("coll_total", "weight_bytes_per_device"):
+            bv, cv = b.get(col, 0), r.get(col, 0)
+            if bv and abs(cv - bv) > bv * tol:
+                failures.append(
+                    f"BENCH_moe_strategies {r['strategy']}.{col}: "
+                    f"{bv} -> {cv} ({cv / bv - 1:+.0%} > ±{tol:.0%})")
+    if not matched:
+        failures.append("BENCH_moe_strategies: no baseline rows matched — "
+                        "refresh benchmarks/baselines/")
+    print(f"BENCH_moe_strategies: auto={cur.get('auto_family')} "
+          f"(baseline {base.get('auto_family')}), {matched} rows matched")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline-dir",
@@ -125,6 +156,9 @@ def main(argv=None):
                           b, c, args.tolerance, args.min_agreement, f)),
                      ("BENCH_streamed_moe.json",
                       lambda b, c, f: check_streamed_moe(
+                          b, c, args.tolerance, f)),
+                     ("BENCH_moe_strategies.json",
+                      lambda b, c, f: check_moe_strategies(
                           b, c, args.tolerance, f))):
         bpath = os.path.join(args.baseline_dir, name)
         cpath = os.path.join(args.current_dir, name)

@@ -1,6 +1,13 @@
 """TPU-adaptation analogue of Fig. 9/12: per-device weight bytes and HLO
-collective traffic of DP / TP / EP / FSE-DP MoE layers on a (2,4) mesh
-(8 host devices — runs in a subprocess so the parent stays 1-device).
+collective traffic of DP / TP / EP / FSE-DP / auto MoE layers on a (2,4)
+mesh (8 host devices — runs in a subprocess so the parent stays 1-device).
+
+Every strategy is reached through the execution-strategy registry
+(``repro.core.strategy``); the ``auto`` row lets the cross-family
+planner pick the winning family for the shape.  Emits a CSV plus
+``artifacts/bench/BENCH_moe_strategies.json``; the committed copy under
+``benchmarks/baselines/`` is the CI regression baseline
+(``check_regression.py``).
 """
 from __future__ import annotations
 
@@ -8,19 +15,21 @@ import json
 import os
 import subprocess
 import sys
+import time
 
 from .common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
 _CHILD = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import functools
 import json
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.configs.base import MoEConfig
 from repro.models import moe as moe_mod
-from repro.core import autotune, fse_dp, baselines
+from repro.core import autotune, strategy
 from repro.parallel import meshctx
 from repro.launch.analysis import collective_bytes
 
@@ -31,13 +40,20 @@ mesh = jax.make_mesh((2, 4), ("data", "model"))
 B, S = 8, 64
 x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d), jnp.bfloat16)
 
-# one scheduler for every strategy: the fse_dp row pins the paper's
+# one registry for every strategy: the fse_dp row pins the paper's
 # signature stream trajectory via a forced plan; fse_dp_auto lets the
-# cost model pick mode/micro-slices/tiles for this shape
+# within-family cost model pick mode/micro-slices/tiles; auto lets the
+# cross-family planner pick the winning *family* for this shape
 B_grp = B // 2                       # data axis is 2-way
 stream_plan = autotune.plan_moe(B_grp, S, d, moe, "swiglu", 4,
                                 dtype_bytes=2, mode="stream")
-fse_dp_stream = functools.partial(fse_dp.fse_dp_moe_3d, plan=stream_plan)
+family_plan = strategy.plan_family(B_grp, S, d, moe, "swiglu", 4,
+                                   dtype_bytes=2)
+
+def run(name, plan=None):
+    def fn(p, x, moe, act):
+        return strategy.execute(name, p, x, moe, act, plan=plan)
+    return fn
 
 def lower(fn, w_specs):
     in_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s), w_specs),
@@ -57,12 +73,14 @@ specs_ep = {"router": {"w_router": P()}, "w_gate": P("model", None, None),
             "w_up": P("model", None, None), "w_down": P("model", None, None)}
 specs_dp = {"router": {"w_router": P()}, "w_gate": P(), "w_up": P(), "w_down": P()}
 
+auto_specs = {"fse_dp": specs_fse, "tp": specs_fse, "ep": specs_ep}
 for name, fn, specs, shard_frac in [
-        ("dp_replicated", fse_dp.fse_dp_moe_3d, specs_dp, 1.0),
-        ("tp", baselines.tp_moe_3d, specs_fse, 0.25),
-        ("ep", baselines.ep_moe_3d, specs_ep, 0.25),
-        ("fse_dp", fse_dp_stream, specs_fse, 0.25),
-        ("fse_dp_auto", fse_dp.fse_dp_moe_3d, specs_fse, 0.25)]:
+        ("dp_replicated", run("fse_dp"), specs_dp, 1.0),
+        ("tp", run("tp"), specs_fse, 0.25),
+        ("ep", run("ep"), specs_ep, 0.25),
+        ("fse_dp", run("fse_dp", stream_plan), specs_fse, 0.25),
+        ("fse_dp_auto", run("fse_dp"), specs_fse, 0.25),
+        ("auto", run("auto"), auto_specs[family_plan.family], 0.25)]:
     compiled = lower(fn, specs)
     coll = collective_bytes(compiled.as_text())
     rows.append({"strategy": name,
@@ -72,7 +90,9 @@ for name, fn, specs, shard_frac in [
                  "collective_permute": coll["collective-permute"],
                  "all_gather": coll["all-gather"],
                  "all_reduce": coll["all-reduce"] + coll["reduce-scatter"]})
-print(json.dumps(rows))
+print(json.dumps({"rows": rows, "auto_family": family_plan.family,
+                  "shape": {"B": B, "S": S, "E": E, "d_model": d,
+                            "d_expert": de, "mesh": "2x4"}}))
 """
 
 
@@ -86,10 +106,26 @@ def run():
     data = json.loads(out.stdout.strip().splitlines()[-1])
     rows = [[r["strategy"], r["weight_bytes_per_device"], int(r["coll_total"]),
              int(r["all_to_all"]), int(r["collective_permute"]),
-             int(r["all_gather"]), int(r["all_reduce"])] for r in data]
+             int(r["all_gather"]), int(r["all_reduce"])] for r in data["rows"]]
     emit("jax_moe_strategies", rows,
          ["strategy", "weight_B_per_dev", "coll_total_B", "all_to_all_B",
           "collective_permute_B", "all_gather_B", "all_reduce_B"])
+
+    import jax
+    payload = {
+        "bench": "jax_moe_strategies",
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "unix_time": int(time.time()),
+        "auto_family": data["auto_family"],
+        "shape": data["shape"],
+        "rows": data["rows"],
+    }
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, "BENCH_moe_strategies.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# auto family: {data['auto_family']} -> {os.path.relpath(path)}")
     return rows
 
 

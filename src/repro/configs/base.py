@@ -41,7 +41,9 @@ class MoEConfig:
     aux_loss_coef: float = 0.01
     # FSE-DP knobs (paper §IV)
     micro_slices: int = 4              # micro-slices per per-device slice
-    impl: str = "dense"                # dense | fse_dp | ep | tp  (default exec path)
+    impl: str = "dense"                # default strategy name when no
+                                       # ExecutionSpec is given (a
+                                       # repro.core.strategy registry key)
 
     def __post_init__(self):
         assert self.top_k <= self.num_experts

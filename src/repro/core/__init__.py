@@ -1,5 +1,9 @@
-from . import autotune, gating, policies
+from . import autotune, gating, policies, strategy
 from .autotune import HardwareProfile, Plan, plan_moe, use_autotune
-from .fse_dp import fse_dp_moe_3d, pick_mode
+from .strategy import (ExecutionSpec, MoEStrategy, StrategyContext,
+                       available, execute, get_strategy, plan_family,
+                       register)
+# deprecated one-line shims (warn on call) — the registry is the API
+from .fse_dp import fse_dp_moe_3d
 from .baselines import ep_moe_3d, tp_moe_3d
 from .policies import paired_load_order, expert_pairs, TokenBufferPolicy

@@ -133,10 +133,18 @@ class HardwareProfile:
 
 @dataclass(frozen=True)
 class Plan:
-    """One fully-resolved MoE execution decision."""
+    """One fully-resolved MoE execution decision.
 
-    mode: str                          # stream | index | slice
+    ``family`` names the execution strategy that owns the plan (a
+    ``repro.core.strategy`` registry key); for the FSE-DP family,
+    ``mode`` further selects the SPMD dataflow (stream | index | slice).
+    Non-FSE-DP families (ep / tp / capacity / dense) carry their family
+    name in ``mode`` as well, so a Plan alone identifies the dataflow.
+    """
+
+    mode: str                          # stream | index | slice | <family>
     micro_slices: int
+    family: str = "fse_dp"
     token_tile: int = 128
     dmodel_tile: Optional[int] = None
     dexpert_tile: Optional[int] = None
@@ -247,6 +255,44 @@ def mode_cost(mode: str, B: int, S: int, d: int, E: int, de: int,
     return {"total_s": total, "compute_s": t_comp, "ring_s": t_ring,
             "hbm_s": t_hbm, "gather_s": t_gather, "psum_s": t_psum,
             "fill_s": t_fill, "ring_bytes": ring_bytes,
+            "flops": expert_flops + dispatch_flops, "capacity": C}
+
+
+def ep_cost(B: int, S: int, d: int, E: int, de: int, top_k: int, cf: float,
+            n_mats: int, P: int, profile: HardwareProfile,
+            dtype_bytes: int = 2) -> Dict[str, float]:
+    """Predicted per-device seconds for one MoE layer under the EP
+    (expert-parallel) baseline family — the cross-family referee for the
+    ``auto`` strategy (``repro.core.strategy``).
+
+    Mirrors ``core.baselines.moe_ep`` term by term: tokens stay sharded
+    (T/P local), each device owns E/P *full* experts, dispatched rows
+    travel to the owning device via ``all_to_all`` and travel back after
+    expert compute.  No weight movement at all (EP's structural
+    advantage over the streaming family), but two all-to-alls whose
+    bytes scale with the routed token rows (its structural cost).
+    """
+    T = B * S
+    ab = wb = dtype_bytes
+    T_loc = T / P
+    C = _cap(int(math.ceil(T_loc)), top_k, E, cf)
+    E_loc = E / P
+    # every device computes its E/P experts over the P*C rows gathered
+    # from all ranks — same total expert flops as the ring modes
+    expert_flops = 2.0 * n_mats * E_loc * (P * C) * d * de
+    dispatch_flops = 2.0 * T_loc * E * C * d * 2 + 2.0 * T_loc * d * E
+    t_comp = (expert_flops + dispatch_flops) / profile.peak_flops
+    # local weight shard (E/P full experts — same bytes as a d_expert/P
+    # slice of all experts) streams DDR/HBM once
+    hbm = n_mats * E_loc * d * de * wb
+    t_hbm = hbm / profile.mem_bw
+    # two all-to-alls of the (E, C, d) dispatch buffer; (P-1)/P of the
+    # rows cross D2D links
+    a2a_bytes = 2.0 * (P - 1) / P * E * C * d * ab
+    t_a2a = a2a_bytes / profile.link_bw + 2 * (P - 1) * profile.link_latency
+    total = max(t_comp, t_hbm) + t_a2a
+    return {"total_s": total, "compute_s": t_comp, "hbm_s": t_hbm,
+            "a2a_s": t_a2a, "a2a_bytes": a2a_bytes,
             "flops": expert_flops + dispatch_flops, "capacity": C}
 
 
@@ -603,11 +649,19 @@ def plan_moe(B: int, S: int, d_model: int, moe, activation: str, P: int,
                             mode)
 
 
+_PICK_MODE_WARNED = False
+
+
 def pick_mode(B: int, S: int, P_: int) -> str:
-    """Deprecated: the zero-knowledge mode heuristic.  Kept as the cost
-    model's fallback (``level='off'`` / unknown hardware); new callers
-    should use :func:`plan_moe` and read ``plan.mode``."""
-    warnings.warn("core.autotune.pick_mode / core.fse_dp.pick_mode is "
-                  "deprecated; use autotune.plan_moe(...).mode",
-                  DeprecationWarning, stacklevel=2)
+    """Deprecated: the zero-knowledge mode heuristic.  The ``level='off'``
+    fallback now routes through the strategy registry
+    (``repro.core.strategy`` -> :func:`fallback_plan`); new callers should
+    use :func:`plan_moe` and read ``plan.mode``.  Warns once per process."""
+    global _PICK_MODE_WARNED
+    if not _PICK_MODE_WARNED:
+        _PICK_MODE_WARNED = True
+        warnings.warn("core.autotune.pick_mode / core.fse_dp.pick_mode is "
+                      "deprecated; use autotune.plan_moe(...).mode or the "
+                      "repro.core.strategy registry",
+                      DeprecationWarning, stacklevel=2)
     return fallback_plan(B, S, P_, 1).mode

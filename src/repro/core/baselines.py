@@ -73,18 +73,30 @@ def _local_ep(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes):
     return y.reshape(B, S, d).astype(x.dtype), aux
 
 
-def ep_moe_3d(params, x, moe: MoEConfig, activation, *, axis="model"):
+def moe_ep(params, x, moe: MoEConfig, activation, *, axis="model"):
     mesh = meshctx.get_mesh()
     P_ = 1 if mesh is None or axis not in mesh.axis_names else mesh.shape[axis]
     if P_ == 1 or moe.num_experts % P_:
-        from .fse_dp import fse_dp_moe_3d
-        return fse_dp_moe_3d(params, x, moe, activation, axis=axis)
+        from .fse_dp import moe_fse_dp
+        return moe_fse_dp(params, x, moe, activation, axis=axis)
     batch = meshctx.batch_axes(mesh, axis)
     import numpy as _np
     bsz = int(_np.prod([mesh.shape[a] for a in batch])) if batch else 1
     if x.shape[0] % max(bsz, 1):
         batch = None
-    x_spec = P(batch, axis, None)
+        bsz = 1
+    B_grp = x.shape[0] // max(bsz, 1)
+    # token layout: seq-shard S over the model axis when it divides
+    # (the train/prefill layout); otherwise shard the batch dim over
+    # (data axes x model) — decode shapes with S < P (HD-MoE's hybrid
+    # regime); otherwise EP cannot lower, degrade to expert streaming.
+    if x.shape[1] % P_ == 0:
+        x_spec = P(batch, axis, None)
+    elif B_grp % P_ == 0:
+        x_spec = P((tuple(batch) if batch else ()) + (axis,), None, None)
+    else:
+        from .fse_dp import moe_fse_dp
+        return moe_fse_dp(params, x, moe, activation, axis=axis)
     w_g = params.get("w_gate")
     fn = functools.partial(_local_ep, moe=moe, activation=activation, axis=axis, P_=P_, pm_axes=tuple(mesh.axis_names))
     if w_g is None:
@@ -126,12 +138,12 @@ def _local_tp(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes):
     return y.reshape(B, S, d).astype(x.dtype), aux
 
 
-def tp_moe_3d(params, x, moe: MoEConfig, activation, *, axis="model"):
+def moe_tp(params, x, moe: MoEConfig, activation, *, axis="model"):
     mesh = meshctx.get_mesh()
     P_ = 1 if mesh is None or axis not in mesh.axis_names else mesh.shape[axis]
     if P_ == 1:
-        from .fse_dp import fse_dp_moe_3d
-        return fse_dp_moe_3d(params, x, moe, activation, axis=axis)
+        from .fse_dp import moe_fse_dp
+        return moe_fse_dp(params, x, moe, activation, axis=axis)
     batch = meshctx.batch_axes(mesh, axis)
     import numpy as _np
     bsz = int(_np.prod([mesh.shape[a] for a in batch])) if batch else 1
@@ -156,3 +168,17 @@ def tp_moe_3d(params, x, moe: MoEConfig, activation, *, axis="model"):
                                P(None, None, axis), P(None, axis, None)),
                      out_specs=(x_spec, P()))(
         x, params["router"]["w_router"], w_g, params["w_up"], params["w_down"])
+
+
+def ep_moe_3d(params, x, moe, activation, *, axis="model"):
+    """Deprecated shim: use ``repro.core.strategy.execute('ep', ...)``."""
+    from .strategy import warn_deprecated_entry
+    warn_deprecated_entry("ep_moe_3d", "ep")
+    return moe_ep(params, x, moe, activation, axis=axis)
+
+
+def tp_moe_3d(params, x, moe, activation, *, axis="model"):
+    """Deprecated shim: use ``repro.core.strategy.execute('tp', ...)``."""
+    from .strategy import warn_deprecated_entry
+    warn_deprecated_entry("tp_moe_3d", "tp")
+    return moe_tp(params, x, moe, activation, axis=axis)

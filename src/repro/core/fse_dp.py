@@ -224,8 +224,8 @@ def _local_moe_slice(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_,
 from .autotune import pick_mode  # noqa: E402
 
 
-def fse_dp_moe_3d(params, x, moe: MoEConfig, activation, *, axis="model",
-                  plan=None):
+def moe_fse_dp(params, x, moe: MoEConfig, activation, *, axis="model",
+               plan=None):
     """x: (B, S, d) global. Returns (y, aux). Falls back to the
     single-device capacity path when no model-parallel mesh is active.
 
@@ -293,3 +293,10 @@ def fse_dp_moe_3d(params, x, moe: MoEConfig, activation, *, axis="model",
 
     return shard_map(fn3, mesh=mesh, in_specs=specs_in, out_specs=specs_out)(
         x, params["router"]["w_router"], w_g, params["w_up"], params["w_down"])
+
+
+def fse_dp_moe_3d(params, x, moe, activation, *, axis="model", plan=None):
+    """Deprecated shim: use ``repro.core.strategy.execute('fse_dp', ...)``."""
+    from .strategy import warn_deprecated_entry
+    warn_deprecated_entry("fse_dp_moe_3d", "fse_dp")
+    return moe_fse_dp(params, x, moe, activation, axis=axis, plan=plan)

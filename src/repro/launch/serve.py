@@ -3,11 +3,31 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-moe-1b-a400m \
       --reduced --requests 6 --max-new 16 --slack 0.2
+
+MoE execution is configured by a single :class:`ExecutionSpec`
+(``repro.core.strategy``): ``--strategy`` names a registered strategy
+(fse_dp / ep / tp / capacity / dense / auto), ``--moe-spec path.json``
+loads a full spec (per-phase + per-layer overrides, autotune level,
+kernels/dispatch toggles); ``--autotune`` overrides the spec's level.
+``--dry-run`` validates the spec (JSON round-trip + registry lookup) and
+builds the engine through one tiny request without the full decode loop.
 """
 from __future__ import annotations
 
 import argparse
 import time
+
+
+def build_spec(args):
+    from repro.core.strategy import ExecutionSpec
+    if args.moe_spec:
+        spec = ExecutionSpec.load(args.moe_spec)
+        if args.strategy:
+            import dataclasses
+            spec = dataclasses.replace(spec, strategy=args.strategy)
+    else:
+        spec = ExecutionSpec(strategy=args.strategy or "capacity")
+    return spec
 
 
 def main():
@@ -20,28 +40,60 @@ def main():
     ap.add_argument("--slack", type=float, default=0.0)
     ap.add_argument("--theta-min", type=int, default=2)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--strategy", default=None,
+                    help="MoE execution strategy (registry name: fse_dp, "
+                         "ep, tp, capacity, dense, auto); default capacity")
+    ap.add_argument("--moe-spec", default=None,
+                    help="path to an ExecutionSpec JSON (see "
+                         "examples/moe-spec.json); --strategy overrides "
+                         "its default strategy field")
     ap.add_argument("--autotune", choices=("off", "analytic", "measured"),
-                    default="analytic",
-                    help="MoE trajectory/tile scheduler (core.autotune); "
-                         "'measured' times kernel candidates once and caches "
-                         "them under artifacts/autotune/")
+                    default=None,
+                    help="override the spec's autotune level "
+                         "(core.autotune); 'measured' times kernel "
+                         "candidates once and caches them under "
+                         "artifacts/autotune/")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="validate the spec (JSON round-trip + registry) "
+                         "and exercise one tiny request, then exit")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     import jax
     import numpy as np
     from repro.configs import get_config, reduced_config
+    from repro.core.strategy import ExecutionSpec
     from repro.models import api
     from repro.serving import Engine, ServeConfig
+
+    spec = build_spec(args)
+    roundtrip = ExecutionSpec.from_json(spec.to_json())
+    if roundtrip != spec:
+        raise SystemExit(f"spec JSON round-trip mismatch:\n{spec}\n{roundtrip}")
+    spec.validate()
+    print(f"moe spec: {spec.to_json()}")
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     if args.reduced:
         cfg = cfg.replace(dtype="float32")
     params = api.init_params(jax.random.PRNGKey(args.seed), cfg)
+
+    if args.dry_run:
+        eng = Engine(params, cfg, ServeConfig(
+            max_batch=2, max_ctx=16, spec=spec, autotune=args.autotune,
+            seed=args.seed))
+        eng.submit([1, 2, 3, 4], max_new=2)
+        outs = eng.run(max_iterations=8)
+        n = sum(len(t) for t in outs.values())
+        if n < 1:
+            raise SystemExit("dry-run emitted no tokens")
+        print(f"dry-run OK: spec={eng.scfg.spec.to_json()} tokens={n}")
+        return
+
     eng = Engine(params, cfg, ServeConfig(
         max_batch=args.max_batch, max_ctx=args.prompt_len + args.max_new + 8,
         buffering_slack=args.slack, theta_min=args.theta_min,
-        autotune=args.autotune, seed=args.seed))
+        spec=spec, autotune=args.autotune, seed=args.seed))
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()

@@ -23,10 +23,14 @@ from . import specs as S
 from .mesh import data_axes
 
 
-def _moe_impl(cfg: ModelConfig, distributed: bool) -> Optional[str]:
+def _moe_spec(cfg: ModelConfig, distributed: bool):
+    """The step's MoE ExecutionSpec: the arch's configured strategy when
+    tracing for the production mesh, the single-device capacity path
+    otherwise (see ``repro.core.strategy``)."""
     if cfg.moe is None:
         return None
-    return cfg.moe.impl if distributed else "capacity"
+    from repro.core.strategy import ExecutionSpec
+    return ExecutionSpec(strategy=cfg.moe.impl if distributed else "capacity")
 
 
 def needs_fsdp(cfg: ModelConfig) -> bool:
@@ -57,12 +61,12 @@ def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
     remat = True if remat is None else remat   # scan-over-layers without remat
                                                # saves every layer's MoE dispatch
                                                # masks — O(L·T·E·C) activation
-    impl = _moe_impl(cfg, distributed)
+    spec = _moe_spec(cfg, distributed)
     baxes = data_axes(mesh)
 
     def train_step(params, opt_state, batch):
         def loss(p):
-            return api.loss_fn(p, batch, cfg, moe_impl=impl, remat=remat,
+            return api.loss_fn(p, batch, cfg, spec=spec, remat=remat,
                                unshard=fsdp)
         (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
         params2, opt2, om = adamw.apply(params, grads, opt_state, lr=lr)
@@ -88,12 +92,12 @@ def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
 
 def build_prefill_step(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
                        distributed: bool = True):
-    impl = _moe_impl(cfg, distributed)
+    spec = _moe_spec(cfg, distributed)
     baxes = data_axes(mesh)
 
     def prefill_step(params, batch):
         logits, caches = api.prefill_fn(params, batch, cfg, shape.seq_len,
-                                        moe_impl=impl)
+                                        spec=spec)
         # serving needs only the last position to start decoding; returning
         # the full (B,S,V) tensor forces a ~60 GiB vocab unshard (§Perf B2)
         return logits[:, -1:], caches
@@ -116,14 +120,14 @@ def build_prefill_step(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
 
 def build_serve_step(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
                      distributed: bool = True):
-    impl = _moe_impl(cfg, distributed)
+    spec = _moe_spec(cfg, distributed)
     baxes = data_axes(mesh)
 
     fsdp_i = needs_fsdp_infer(cfg)
 
     def serve_step(params, caches, token, cache_len):
         logits, new_caches = api.decode_fn(params, token, caches, cache_len, cfg,
-                                           moe_impl=impl, unshard=fsdp_i)
+                                           spec=spec, unshard=fsdp_i)
         return logits, new_caches
 
     pstruct = S.params_struct(cfg)

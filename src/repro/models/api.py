@@ -67,7 +67,7 @@ def _head(params):
     return head if head is not None else params["embed"].T
 
 
-def loss_fn(params, batch, cfg: ModelConfig, *, moe_impl=None, remat=False,
+def loss_fn(params, batch, cfg: ModelConfig, *, spec=None, remat=False,
             use_flash=False, unshard=False):
     """Training loss (CE + MoE aux). Returns (loss, metrics)."""
     if cfg.is_encoder_decoder:
@@ -78,7 +78,7 @@ def loss_fn(params, batch, cfg: ModelConfig, *, moe_impl=None, remat=False,
         return ce, {"ce": ce, "aux": jnp.zeros(())}
     prefix = batch.get("prefix_embeds")
     h, aux = transformer.forward(params, batch["tokens"], cfg,
-                                 prefix_embeds=prefix, moe_impl=moe_impl,
+                                 prefix_embeds=prefix, spec=spec,
                                  remat=remat, use_flash=use_flash,
                                  unshard=unshard, return_hidden=True)
     labels = batch["labels"]
@@ -89,7 +89,7 @@ def loss_fn(params, batch, cfg: ModelConfig, *, moe_impl=None, remat=False,
     return ce + coef * aux, {"ce": ce, "aux": aux}
 
 
-def prefill_fn(params, batch, cfg: ModelConfig, max_seq: int, *, moe_impl=None):
+def prefill_fn(params, batch, cfg: ModelConfig, max_seq: int, *, spec=None):
     """Prompt processing -> (logits, caches)."""
     if cfg.is_encoder_decoder:
         memory = whisper.encode(params, batch["frames"], cfg)
@@ -99,16 +99,16 @@ def prefill_fn(params, batch, cfg: ModelConfig, max_seq: int, *, moe_impl=None):
         return logits, caches
     return transformer.prefill(params, batch["tokens"], cfg, max_seq,
                                prefix_embeds=batch.get("prefix_embeds"),
-                               moe_impl=moe_impl)
+                               spec=spec)
 
 
 def decode_fn(params, token, caches, cache_len, cfg: ModelConfig, *,
-              moe_impl=None, unshard=False):
+              spec=None, unshard=False):
     """One decode step -> (logits, new caches)."""
     if cfg.is_encoder_decoder:
         return whisper.decode_step(params, token, caches, cache_len, cfg)
     return transformer.decode_step(params, token, caches, cache_len, cfg,
-                                   moe_impl=moe_impl, unshard=unshard)
+                                   spec=spec, unshard=unshard)
 
 
 def init_decode_caches(params, cfg: ModelConfig, batch: int, max_seq: int,

@@ -4,11 +4,12 @@ Weight layout (stacked over experts — shardable on any axis):
   w_gate, w_up : (E, d_model, d_expert)       (w_gate only for swiglu)
   w_down       : (E, d_expert, d_model)
 
-Execution paths (``impl``):
-  dense     — every expert on every token, masked combine (oracle; tests)
-  capacity  — Switch-style capacity dispatch (efficient single-device XLA)
-  fse_dp    — the paper's expert streaming (repro.core.fse_dp, shard_map)
-  ep / tp   — baselines (repro.core.baselines)
+Execution is dispatched through the strategy registry
+(``repro.core.strategy``): ``moe_block`` resolves an
+:class:`ExecutionSpec` (or legacy ``impl`` string) to a registered
+strategy — dense / capacity (single-device, implemented here), fse_dp
+(``repro.core.fse_dp``), ep / tp (``repro.core.baselines``), or the
+cross-family ``auto`` planner.
 """
 from __future__ import annotations
 
@@ -187,42 +188,32 @@ def scatter_combine(ye, idx, wts, T):
 # block entry point
 # ---------------------------------------------------------------------------
 
-def moe_block(params, x, moe: MoEConfig, activation, *, impl=None,
-              mesh_axis="model", return_aux=False):
-    """x: (B,S,d); routes and executes the configured impl.
+def moe_block(params, x, moe: MoEConfig, activation, *, impl=None, spec=None,
+              phase=None, layer=None, mesh_axis="model", return_aux=False):
+    """x: (B,S,d) or (T,d); thin lookup into the execution-strategy
+    registry (``repro.core.strategy``).
 
-    Distributed impls (fse_dp / ep / tp) route *inside* shard_map on
-    local tokens and return a pmean'd aux loss; single-device impls
-    route globally.
+    ``spec`` is anything :meth:`ExecutionSpec.coerce` accepts (a spec, a
+    strategy name, a dict); ``impl`` is the legacy string knob, kept as
+    an alias.  With neither, ``moe.impl`` names the default strategy.
+    ``phase`` ('train' | 'prefill' | 'decode') and ``layer`` select the
+    spec's per-phase / per-layer overrides.  Distributed strategies
+    (fse_dp / ep / tp) route *inside* shard_map on local tokens and
+    return a pmean'd aux loss; single-device strategies route globally.
     """
-    impl = impl or moe.impl
+    from repro.core import strategy as strat
+    sp = strat.ExecutionSpec.coerce(spec if spec is not None else impl,
+                                    default=moe.impl)
+    name = sp.resolve(phase=phase, layer=layer)
     shape = x.shape
     if x.ndim == 2:
         x = x[None]
-    routing = None
-    if impl == "fse_dp":
-        from repro.core import fse_dp
-        y, aux = fse_dp.fse_dp_moe_3d(params, x, moe, activation, axis=mesh_axis)
-    elif impl == "ep":
-        from repro.core import baselines
-        y, aux = baselines.ep_moe_3d(params, x, moe, activation, axis=mesh_axis)
-    elif impl == "tp":
-        from repro.core import baselines
-        y, aux = baselines.tp_moe_3d(params, x, moe, activation, axis=mesh_axis)
-    elif impl in ("dense", "capacity"):
-        x2d = x.reshape(-1, shape[-1])
-        routing = gating.route(params["router"], x2d, top_k=moe.top_k)
-        if impl == "dense":
-            y = moe_dense(params, x2d, routing, activation)
-        else:
-            y = moe_capacity(params, x2d, routing, moe, activation)
-        y = y.reshape(x.shape)
-        aux = gating.aux_load_balance_loss(routing, moe.num_experts)
-    else:
-        raise ValueError(f"unknown moe impl {impl!r}")
+    with sp.scope():
+        y, aux = strat.get_strategy(name).execute(params, x, moe, activation,
+                                                  axis=mesh_axis)
     if moe.num_shared_experts:
         y = y + ffn(params["shared"], x, activation)
     y = y.reshape(shape)
     if return_aux:
-        return y, aux, routing
+        return y, aux
     return y

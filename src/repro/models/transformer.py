@@ -87,8 +87,24 @@ def init_lm(key, cfg: ModelConfig):
 # slot application
 # ---------------------------------------------------------------------------
 
+def _coerce_spec(spec):
+    """Accept None / strategy name / dict / ExecutionSpec (see
+    ``repro.core.strategy``); None keeps the config default."""
+    if spec is None:
+        return None
+    from repro.core.strategy import ExecutionSpec
+    return ExecutionSpec.coerce(spec)
+
+
+def _needs_unroll(spec) -> bool:
+    """Per-layer strategy overrides need a different lowering per
+    period, so the scan-over-periods must unroll into a Python loop."""
+    return spec is not None and bool(spec.layer_overrides)
+
+
 def _apply_slot_full(slot, x, cfg: ModelConfig, mixer, ffn_kind, *,
-                     positions=None, moe_impl=None, use_flash=False):
+                     positions=None, spec=None, phase="train", layer=None,
+                     use_flash=False):
     """Full-sequence forward for one layer slot. Returns (x, aux)."""
     h = apply_norm(cfg.norm, slot["norm1"], x)
     if mixer == "attn":
@@ -103,8 +119,9 @@ def _apply_slot_full(slot, x, cfg: ModelConfig, mixer, ffn_kind, *,
     if ffn_kind != "none":
         h = apply_norm(cfg.norm, slot["norm2"], x)
         if ffn_kind == "moe":
-            h, aux, _ = moe_mod.moe_block(slot["moe"], h, cfg.moe, cfg.activation,
-                                          impl=moe_impl, return_aux=True)
+            h, aux = moe_mod.moe_block(slot["moe"], h, cfg.moe, cfg.activation,
+                                       spec=spec, phase=phase, layer=layer,
+                                       return_aux=True)
         else:
             h = ffn(slot["ffn"], h, cfg.activation)
         x = x + h
@@ -118,7 +135,7 @@ class SlotCache(NamedTuple):
 
 
 def _apply_slot_decode(slot, x, cache: SlotCache, cache_len, cfg: ModelConfig,
-                       mixer, ffn_kind, *, moe_impl=None):
+                       mixer, ffn_kind, *, spec=None, layer=None):
     h = apply_norm(cfg.norm, slot["norm1"], x)
     if mixer == "attn":
         h, new_kv = attn_mod.attention_decode(
@@ -133,7 +150,8 @@ def _apply_slot_decode(slot, x, cache: SlotCache, cache_len, cfg: ModelConfig,
     if ffn_kind != "none":
         h = apply_norm(cfg.norm, slot["norm2"], x)
         if ffn_kind == "moe":
-            h = moe_mod.moe_block(slot["moe"], h, cfg.moe, cfg.activation, impl=moe_impl)
+            h = moe_mod.moe_block(slot["moe"], h, cfg.moe, cfg.activation,
+                                  spec=spec, phase="decode", layer=layer)
         else:
             h = ffn(slot["ffn"], h, cfg.activation)
         x = x + h
@@ -159,15 +177,19 @@ def _unembed(params, x, cfg):
 
 
 def forward(params, tokens, cfg: ModelConfig, *, prefix_embeds=None,
-            moe_impl=None, use_flash=False, remat=False, unshard=False,
+            spec=None, use_flash=False, remat=False, unshard=False,
             return_hidden=False):
     """tokens: (B,S) -> (logits (B,S_total,V), aux_loss scalar).
 
+    ``spec``: MoE execution spec (strategy name / dict / ExecutionSpec).
+    Per-layer strategy overrides unroll the period scan (each layer may
+    lower differently); otherwise layers scan as before.
     ``unshard``: apply the per-layer ZeRO-3 gather constraint inside the
     scan body (FSDP layouts).  ``return_hidden``: skip the unembedding
     (the fused-CE loss path consumes hidden states chunk-wise).
     """
     p, plan = period_plan(cfg)
+    sp = _coerce_spec(spec)
     x = _embed(params, tokens, cfg, prefix_embeds)
     S = x.shape[1]
     positions = jnp.arange(S)[None, :]
@@ -176,7 +198,7 @@ def forward(params, tokens, cfg: ModelConfig, *, prefix_embeds=None,
     # every layer, so hybrid/ssm families keep the batch-sharded stream
     use_sp = not any(m == "ssm" for m, _ in plan)
 
-    def period_body(carry, period_params):
+    def period_body(carry, period_params, layer_base=None):
         x, aux = carry
         from repro.parallel.sharding import constrain_seq_sharded, unshard_slot_params
         if use_sp:
@@ -184,18 +206,31 @@ def forward(params, tokens, cfg: ModelConfig, *, prefix_embeds=None,
         if unshard:
             period_params = tuple(unshard_slot_params(s) for s in period_params)
         for s, (mixer, ffn_kind) in enumerate(plan):
+            layer = None if layer_base is None else layer_base + s
             x, a = _apply_slot_full(period_params[s], x, cfg, mixer, ffn_kind,
-                                    positions=positions, moe_impl=moe_impl,
+                                    positions=positions, spec=sp,
+                                    phase="train", layer=layer,
                                     use_flash=use_flash)
             aux = aux + a
         if use_sp:
             x = constrain_seq_sharded(x)   # pin the saved carry to SP layout
         return (x, aux), None
 
-    body = period_body
-    if remat:
-        body = jax.checkpoint(period_body, prevent_cse=False)
-    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["periods"])
+    carry = (x, jnp.zeros((), jnp.float32))
+    if _needs_unroll(sp):
+        body = period_body
+        if remat:
+            body = jax.checkpoint(period_body, prevent_cse=False,
+                                  static_argnums=(2,))
+        for c in range(cfg.num_layers // p):
+            pp = jax.tree.map(lambda a: a[c], params["periods"])
+            carry, _ = body(carry, pp, c * p)
+        x, aux = carry
+    else:
+        body = period_body
+        if remat:
+            body = jax.checkpoint(period_body, prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(body, carry, params["periods"])
     x = apply_norm(cfg.norm, params["final_norm"], x)
     if return_hidden:
         return x, aux
@@ -226,16 +261,17 @@ def init_caches(cfg: ModelConfig, batch: int, max_seq: int):
 
 
 def prefill(params, tokens, cfg: ModelConfig, max_seq: int, *,
-            prefix_embeds=None, moe_impl=None):
+            prefix_embeds=None, spec=None):
     """Run the prompt, returning (logits, caches filled up to S)."""
     p, plan = period_plan(cfg)
+    sp = _coerce_spec(spec)
     x = _embed(params, tokens, cfg, prefix_embeds)
     B, S = x.shape[0], x.shape[1]
     positions = jnp.arange(S)[None, :]
 
     use_sp = not any(m == "ssm" for m, _ in plan)
 
-    def period_body(x, period_in):
+    def period_body(x, period_in, layer_base=None):
         from repro.parallel.sharding import constrain_seq_sharded
         if use_sp:
             x = constrain_seq_sharded(x)
@@ -265,40 +301,60 @@ def prefill(params, tokens, cfg: ModelConfig, max_seq: int, *,
             if ffn_kind != "none":
                 h = apply_norm(cfg.norm, period_params[s]["norm2"], x)
                 if ffn_kind == "moe":
+                    layer = None if layer_base is None else layer_base + s
                     h = moe_mod.moe_block(period_params[s]["moe"], h, cfg.moe,
-                                          cfg.activation, impl=moe_impl)
+                                          cfg.activation, spec=sp,
+                                          phase="prefill", layer=layer)
                 else:
                     h = ffn(period_params[s]["ffn"], h, cfg.activation)
                 x = x + h
         return x, tuple(new_caches)
 
-    x, caches = jax.lax.scan(period_body, x, params["periods"])
+    if _needs_unroll(sp):
+        per_period = []
+        for c in range(cfg.num_layers // p):
+            pp = jax.tree.map(lambda a: a[c], params["periods"])
+            x, ncs = period_body(x, pp, c * p)
+            per_period.append(ncs)
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_period)
+    else:
+        x, caches = jax.lax.scan(period_body, x, params["periods"])
     x = apply_norm(cfg.norm, params["final_norm"], x)
     return _unembed(params, x, cfg), caches
 
 
 def decode_step(params, token, caches, cache_len, cfg: ModelConfig, *,
-                moe_impl=None, unshard=False):
+                spec=None, unshard=False):
     """token: (B,1) int32; caches from init_caches/prefill; cache_len: (B,).
 
     Returns (logits (B,1,V), new caches).
     """
     p, plan = period_plan(cfg)
+    sp = _coerce_spec(spec)
     x = _embed(params, token, cfg)
 
-    def period_body(x, period_in):
+    def period_body(x, period_in, layer_base=None):
         period_params, period_caches = period_in
         if unshard:
             from repro.parallel.sharding import unshard_slot_params
             period_params = tuple(unshard_slot_params(s) for s in period_params)
         new_caches = []
         for s, (mixer, ffn_kind) in enumerate(plan):
+            layer = None if layer_base is None else layer_base + s
             x, nc = _apply_slot_decode(period_params[s], x, period_caches[s],
                                        cache_len, cfg, mixer, ffn_kind,
-                                       moe_impl=moe_impl)
+                                       spec=sp, layer=layer)
             new_caches.append(nc)
         return x, tuple(new_caches)
 
-    x, new_caches = jax.lax.scan(period_body, x, (params["periods"], caches))
+    if _needs_unroll(sp):
+        per_period = []
+        for c in range(cfg.num_layers // p):
+            pin = jax.tree.map(lambda a: a[c], (params["periods"], caches))
+            x, ncs = period_body(x, pin, c * p)
+            per_period.append(ncs)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_period)
+    else:
+        x, new_caches = jax.lax.scan(period_body, x, (params["periods"], caches))
     x = apply_norm(cfg.norm, params["final_norm"], x)
     return _unembed(params, x, cfg), new_caches

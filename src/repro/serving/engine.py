@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import autotune, gating
+from repro.core import gating
 from repro.core.policies import TokenBufferPolicy, paired_load_order
 from repro.models import api, moe as moe_mod, transformer
 from repro.models.layers import apply_norm
@@ -42,10 +42,26 @@ class ServeConfig:
     buffering_slack: float = 0.0
     theta_min: int = 2
     n_threshold: Optional[int] = None   # default derived from slack
-    moe_impl: str = "capacity"
-    autotune: str = "analytic"          # off | analytic | measured (core.autotune)
+    # single MoE execution configuration object (repro.core.strategy):
+    # a spec, strategy name, or dict; replaces the old moe_impl/autotune
+    # string knobs (kept below as deprecated aliases merged into it)
+    spec: Optional[object] = None
+    moe_impl: Optional[str] = None      # deprecated: use spec
+    autotune: Optional[str] = None      # deprecated: use spec.autotune
     temperature: float = 0.0            # 0 = greedy
     seed: int = 0
+
+    def __post_init__(self):
+        from dataclasses import replace
+        from repro.core.strategy import ExecutionSpec
+        base = self.spec if self.spec is not None else (self.moe_impl
+                                                        or "capacity")
+        sp = ExecutionSpec.coerce(base, default="capacity")
+        if self.autotune is not None:
+            sp = replace(sp, autotune=self.autotune)
+        elif sp.autotune is None:
+            sp = replace(sp, autotune="analytic")
+        self.spec = sp.validate()
 
 
 @dataclass
@@ -105,10 +121,9 @@ class Engine:
         slot = self.free_slots.pop(0)
         rid = f"req{next(self._rid)}"
         tokens = jnp.asarray(prompt, jnp.int32)[None]
-        with autotune.use_autotune(self.scfg.autotune):
-            logits, caches1 = api.prefill_fn(self.params, {"tokens": tokens},
-                                             self.cfg, self.scfg.max_ctx,
-                                             moe_impl=self.scfg.moe_impl)
+        logits, caches1 = api.prefill_fn(self.params, {"tokens": tokens},
+                                         self.cfg, self.scfg.max_ctx,
+                                         spec=self.scfg.spec)
         # merge per-request caches into the batched slot
         def merge(big, small):
             if not hasattr(small, "ndim") or small.ndim < 2:
@@ -174,7 +189,8 @@ class Engine:
                 run_ffn = self._defer_cold(slot_params, x, layer, run_ffn)
                 if not run_ffn:
                     continue
-            x = self._apply_ffn(slot_params, x, ffn_kind, [r.slot for r in run_ffn])
+            x = self._apply_ffn(slot_params, x, ffn_kind,
+                                [r.slot for r in run_ffn], layer)
             for r in run_ffn:
                 r.progress = 2 * (layer + 1)
         self._x = x
@@ -278,16 +294,16 @@ class Engine:
                                                     - (counts2 > 0).sum())
         return kept
 
-    def _apply_ffn(self, slot_params, x, ffn_kind, slots):
+    def _apply_ffn(self, slot_params, x, ffn_kind, slots, layer=None):
         cfg = self.cfg
         mask = self._mask(slots)
         if ffn_kind == "none":
             return x
         h = apply_norm(cfg.norm, slot_params["norm2"], x)
         if ffn_kind == "moe":
-            with autotune.use_autotune(self.scfg.autotune):
-                h = moe_mod.moe_block(slot_params["moe"], h, cfg.moe,
-                                      cfg.activation, impl=self.scfg.moe_impl)
+            h = moe_mod.moe_block(slot_params["moe"], h, cfg.moe,
+                                  cfg.activation, spec=self.scfg.spec,
+                                  phase="decode", layer=layer)
         else:
             h = ffn(slot_params["ffn"], h, cfg.activation)
         return jnp.where(mask[:, None, None], x + h, x)

@@ -153,6 +153,77 @@ def simulate_mode(hw: HardwareConfig, spec: ModelSpec, mode: str,
                       t_gather + t_psum, ddr_shard * P)
 
 
+def simulate_ep(hw: HardwareConfig, spec: ModelSpec, tokens: int, *,
+                capacity_factor: float = 1.25,
+                act_bytes: Optional[int] = None) -> ModeResult:
+    """Latency of one MoE layer under the EP baseline family
+    (``core.baselines.moe_ep``): tokens stay sharded, every chiplet owns
+    E/P full experts, dispatched rows all-to-all to the owner and back.
+
+    The all-to-all is simulated as discrete port-serialized peer
+    messages over the 2D mesh (per-source send chains with Manhattan
+    hop latency), deliberately not the closed-form ``(P-1)/P`` bytes
+    the cost model (``autotune.ep_cost``) uses — so cross-family rank
+    agreement is a meaningful check, matching the stream/index ring.
+    """
+    P = hw.num_chiplets
+    E, d, de = spec.num_experts, spec.d_model, spec.d_expert
+    if E % P:
+        raise ValueError(f"EP needs E % P == 0 (E={E}, P={P})")
+    ab = act_bytes if act_bytes is not None else hw.bytes_per_act
+    E_loc = E // P
+    T_loc = tokens / P
+    C = _capacity(max(1, math.ceil(T_loc)), spec, capacity_factor)
+
+    # one a2a phase: each source sends (P-1) peer messages of its
+    # per-destination dispatch rows, serialized on the source's port
+    msg = E_loc * C * d * ab
+    t_a2a = max(
+        sum(msg / hw.d2d_gbps + hw.hops(src, (src + s) % P)
+            * hw.d2d_hop_latency for s in range(1, P))
+        for src in range(P))
+
+    dispatch_flops = 2.0 * T_loc * E * C * d * 2 + 2.0 * T_loc * d * E
+    flops = 2.0 * spec.n_mats * E_loc * (P * C) * d * de + dispatch_flops
+    t_comp = flops / hw.tops
+    ddr = spec.n_mats * E_loc * d * de * hw.bytes_per_param
+    t_ddr = ddr / (hw.ddr_total / P)
+    lat = t_a2a + max(t_comp, t_ddr) + t_a2a
+    return ModeResult("ep", lat, t_comp, 0.0, 2 * t_a2a, ddr * P)
+
+
+def rank_families(hw: HardwareConfig, spec: ModelSpec, tokens: int, *,
+                  B: int, S: int,
+                  capacity_factor: float = 1.25) -> Dict[str, float]:
+    """Simulated latency per execution *family* of the (B, S) shape —
+    the independent referee of the cross-family ``auto`` planner
+    (``repro.core.strategy.family_costs``).
+
+    ``fse_dp`` is the best ring (stream/index) schedule over its
+    micro-slice candidates; when no ring layout lowers the family is
+    out of the race (its degraded slice dataflow is exactly ``tp``,
+    which has its own entry).  ``ep`` is the discrete all-to-all
+    simulation when E % P == 0 and the tokens can seq- or batch-shard.
+    """
+    from repro.core.autotune import _micro_candidates, feasible_modes
+    from repro.core.strategy import ep_feasible
+    P = hw.num_chiplets
+    de_loc = max(1, spec.d_expert // P)
+    out: Dict[str, float] = {}
+    ring = [m for m in feasible_modes(B, S, P) if m != "slice"]
+    if ring:
+        out["fse_dp"] = min(
+            simulate_mode(hw, spec, m, tokens, micro_slices=M,
+                          capacity_factor=capacity_factor).latency
+            for m in ring for M in _micro_candidates(de_loc, 0))
+    if ep_feasible(B, S, spec.num_experts, P):
+        out["ep"] = simulate_ep(hw, spec, tokens,
+                                capacity_factor=capacity_factor).latency
+    out["tp"] = simulate_mode(hw, spec, "slice", tokens,
+                              capacity_factor=capacity_factor).latency
+    return out
+
+
 def rank_modes(hw: HardwareConfig, spec: ModelSpec, tokens: int, *,
                B: int, S: int, micro_slices: Optional[int] = None,
                capacity_factor: float = 1.25) -> Dict[str, float]:

@@ -34,7 +34,8 @@ class TrainConfig:
     ckpt_every: int = 50
     keep_ckpts: int = 3
     grad_compress_bits: int = 0       # 0 = off; 8 = int8 + error feedback
-    moe_impl: Optional[str] = None
+    moe_spec: Optional[Any] = None    # MoE ExecutionSpec / strategy name
+    moe_impl: Optional[str] = None    # deprecated alias for moe_spec
     remat: bool = False
     log_every: int = 10
     state_dtype: str = "float32"
@@ -43,9 +44,11 @@ class TrainConfig:
 def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
     sched = adamw.cosine_schedule(tcfg.lr, tcfg.warmup, tcfg.total_steps)
 
+    spec = tcfg.moe_spec if tcfg.moe_spec is not None else tcfg.moe_impl
+
     def step_fn(params, opt_state, batch, residual):
         def loss(p):
-            l, metrics = api.loss_fn(p, batch, cfg, moe_impl=tcfg.moe_impl,
+            l, metrics = api.loss_fn(p, batch, cfg, spec=spec,
                                      remat=tcfg.remat)
             return l, metrics
         (lval, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)

@@ -1,5 +1,5 @@
 """Plan-driven dispatch == forced-mode execution, bit for bit, on 8 fake
-devices: for each of stream/index/slice, ``fse_dp_moe_3d(plan=...)`` must
+devices: for each of stream/index/slice, ``strategy.execute("fse_dp", ..., plan=...)`` must
 produce exactly the arrays of a hand-built shard_map over the same body
 with the same micro-slice count and kernel tile opts.  Also checks the
 default (auto) plan equals its own forced re-execution, and that the
@@ -10,7 +10,7 @@ import functools
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.configs.base import MoEConfig
-from repro.core import autotune, fse_dp
+from repro.core import autotune, fse_dp, strategy
 from repro.models import moe as moe_mod
 from repro.parallel import meshctx
 
@@ -30,7 +30,7 @@ BODIES = {"stream": fse_dp._local_moe_stream,
 
 
 def forced_reference(plan):
-    """Hand-built shard_map mirroring fse_dp_moe_3d for this plan."""
+    """Hand-built shard_map mirroring the fse_dp strategy for this plan."""
     body = BODIES[plan.mode]
     kopts = tuple(sorted(plan.kernel_opts().items()))
     fn = functools.partial(body, moe=moe, activation="swiglu", axis="model",
@@ -51,7 +51,7 @@ with meshctx.with_mesh(mesh):
         plan = autotune.plan_moe(B_grp, S, d, moe, "swiglu", P_,
                                  dtype_bytes=4, mode=mode)
         y_plan, aux_plan = jax.jit(
-            lambda p, x: fse_dp.fse_dp_moe_3d(p, x, moe, "swiglu", plan=plan)
+            lambda p, x: strategy.execute("fse_dp", p, x, moe, "swiglu", plan=plan)
         )(params, x)
         y_ref, aux_ref = forced_reference(plan)
         assert np.array_equal(np.asarray(y_plan), np.asarray(y_ref)), \
@@ -64,7 +64,7 @@ with meshctx.with_mesh(mesh):
     # default (auto) plan == its own forced re-execution
     auto = autotune.plan_moe(B_grp, S, d, moe, "swiglu", P_, dtype_bytes=4)
     y_auto, _ = jax.jit(
-        lambda p, x: fse_dp.fse_dp_moe_3d(p, x, moe, "swiglu"))(params, x)
+        lambda p, x: strategy.execute("fse_dp", p, x, moe, "swiglu"))(params, x)
     y_ref, _ = forced_reference(auto)
     assert np.array_equal(np.asarray(y_auto), np.asarray(y_ref))
     print(f"auto plan ({auto.mode}, source={auto.source}) == forced")
@@ -75,7 +75,7 @@ with meshctx.with_mesh(mesh):
         assert off.source == "fallback" and off.mode == "stream" \
             and off.micro_slices == moe.micro_slices
         y_off, _ = jax.jit(
-            lambda p, x: fse_dp.fse_dp_moe_3d(p, x, moe, "swiglu"))(params, x)
+            lambda p, x: strategy.execute("fse_dp", p, x, moe, "swiglu"))(params, x)
     y_ref_off, _ = forced_reference(off)
     assert np.array_equal(np.asarray(y_off), np.asarray(y_ref_off))
     print("off-level fallback == legacy static dispatch")

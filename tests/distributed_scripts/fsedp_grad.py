@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import MoEConfig
-from repro.core import fse_dp
+from repro.core import strategy
 from repro.models import moe as moe_mod
 from repro.parallel import meshctx
 
@@ -23,7 +23,7 @@ x = jax.random.normal(jax.random.PRNGKey(2), (4, 16, d), jnp.float32)
 
 def loss_dist(p, x):
     with meshctx.with_mesh(mesh):
-        y, aux = fse_dp.fse_dp_moe_3d(p, x, moe, "swiglu")
+        y, aux = strategy.execute("fse_dp", p, x, moe, "swiglu")
     return jnp.sum(y ** 2) + 0.0 * aux
 
 

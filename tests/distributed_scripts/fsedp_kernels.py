@@ -12,7 +12,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import MoEConfig
-from repro.core import fse_dp
+from repro.core import fse_dp, strategy
 from repro.kernels import ops as kops
 from repro.models import moe as moe_mod
 from repro.parallel import meshctx
@@ -29,7 +29,7 @@ def run(activation, enabled):
                               jnp.float32)
     outs = {}
     with meshctx.with_mesh(mesh), kops.use_kernels(enabled):
-        y, _ = jax.jit(lambda p, x: fse_dp.fse_dp_moe_3d(p, x, moe, activation))(params, x)
+        y, _ = jax.jit(lambda p, x: strategy.execute("fse_dp", p, x, moe, activation))(params, x)
         outs["stream"] = np.asarray(y)
         for body, nm in [(fse_dp._local_moe_index, "index"),
                          (fse_dp._local_moe_slice, "slice")]:

@@ -5,7 +5,7 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.configs.base import MoEConfig
 from repro.models import moe as moe_mod
-from repro.core import gating, fse_dp, baselines
+from repro.core import gating, fse_dp, strategy
 from repro.parallel import meshctx
 
 E, k, d, de = 8, 2, 32, 64
@@ -23,8 +23,8 @@ routing = gating.route(params["router"], x2d, top_k=moe.top_k)
 y_ref = moe_mod.moe_dense(params, x2d, routing, "swiglu").reshape(B, S, d)
 
 with meshctx.with_mesh(mesh):
-    for name, fn in [("fse_dp", fse_dp.fse_dp_moe_3d), ("ep", baselines.ep_moe_3d), ("tp", baselines.tp_moe_3d)]:
-        y, aux = jax.jit(lambda p, x: fn(p, x, moe, "swiglu"))(params, x)
+    for name in ("fse_dp", "ep", "tp"):
+        y, aux = jax.jit(lambda p, x, n=name: strategy.execute(n, p, x, moe, "swiglu"))(params, x)
         err = float(jnp.max(jnp.abs(y - y_ref)))
         print(f"{name:8s} maxerr={err:.2e} aux={float(aux):.4f}")
         assert err < 2e-4, (name, err)

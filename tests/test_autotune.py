@@ -130,11 +130,19 @@ def test_level_off_matches_legacy_heuristic():
         assert plan.kernel_opts() == {}
 
 
-def test_pick_mode_deprecated():
+def test_pick_mode_deprecated_one_shot(monkeypatch):
+    """pick_mode warns exactly once per process and is gone from the
+    repro.core namespace (the registry is the API)."""
+    import warnings
+
     from repro.core import fse_dp
+    import repro.core as core_pkg
+    assert not hasattr(core_pkg, "pick_mode")
+    monkeypatch.setattr(at, "_PICK_MODE_WARNED", False)
     with pytest.warns(DeprecationWarning):
         assert fse_dp.pick_mode(4, 16, 4) == "stream"
-    with pytest.warns(DeprecationWarning):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # second call must be silent
         assert at.pick_mode(5, 3, 4) == "slice"
 
 

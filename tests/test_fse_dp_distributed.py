@@ -27,11 +27,19 @@ def test_kernel_vs_ref_parity_all_modes():
 
 @pytest.mark.slow
 def test_plan_driven_dispatch_bit_identical():
-    """For each of stream/index/slice, fse_dp_moe_3d(plan=...) is bit-
-    identical to a hand-forced shard_map of the same body, and the
-    level='off' fallback reproduces the legacy static dispatch."""
+    """For each of stream/index/slice, the fse_dp strategy with a forced
+    plan is bit-identical to a hand-forced shard_map of the same body,
+    and the level='off' fallback reproduces the legacy static dispatch."""
     out = run_distributed_script("fsedp_autotune.py")
     assert "AUTOTUNE PLAN PARITY OK" in out
+
+
+@pytest.mark.slow
+def test_per_layer_spec_overrides_match_forced():
+    """ExecutionSpec layer_overrides (fse_dp on even layers, ep on odd)
+    == per-layer forced runs, bit for bit, on 8 fake devices."""
+    out = run_distributed_script("strategy_overrides.py")
+    assert "LAYER OVERRIDES OK" in out
 
 
 @pytest.mark.slow

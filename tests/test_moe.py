@@ -100,6 +100,20 @@ def test_shared_experts_added():
     assert not np.allclose(np.asarray(y), np.asarray(y2))
 
 
+@pytest.mark.parametrize("impl", ["dense", "capacity"])
+@pytest.mark.parametrize("shared", [0, 1])
+def test_moe_block_2d_matches_3d(impl, shared):
+    """(T,d) input == the (1,T,d) path, exact values and shape — the
+    regression test for the old double-reshape around the shared-expert
+    add (2-D x reshaped to 3-D and back must change nothing)."""
+    moe, params = _setup(shared=shared)
+    x2d = jax.random.normal(jax.random.PRNGKey(7), (12, 16), jnp.float32)
+    y2d = moe_mod.moe_block(params, x2d, moe, "swiglu", impl=impl)
+    y3d = moe_mod.moe_block(params, x2d[None], moe, "swiglu", impl=impl)
+    assert y2d.shape == x2d.shape
+    np.testing.assert_array_equal(np.asarray(y2d), np.asarray(y3d)[0])
+
+
 def test_expert_token_counts():
     moe, params = _setup(E=4, k=2)
     x = jax.random.normal(jax.random.PRNGKey(4), (20, 16), jnp.float32)

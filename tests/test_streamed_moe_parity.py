@@ -107,16 +107,16 @@ def test_moe_capacity_kernel_parity(act, sorted_dispatch):
 
 
 def test_fse_dp_single_device_kernel_parity():
-    """fse_dp_moe_3d without a mesh (P=1 capacity fallback), kernels on/off."""
-    from repro.core import fse_dp
+    """fse_dp strategy without a mesh (P=1 capacity fallback), kernels on/off."""
+    from repro.core import strategy
     moe = MoEConfig(num_experts=4, top_k=2, d_expert=32, capacity_factor=2.0)
     params = moe_mod.moe_init(jax.random.PRNGKey(2), 16, moe, "swiglu",
                               jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(3), (2, 8, 16), jnp.float32)
     with ops.use_kernels(True):
-        y_k, aux_k = fse_dp.fse_dp_moe_3d(params, x, moe, "swiglu")
+        y_k, aux_k = strategy.execute("fse_dp", params, x, moe, "swiglu")
     with ops.use_kernels(False):
-        y_r, aux_r = fse_dp.fse_dp_moe_3d(params, x, moe, "swiglu")
+        y_r, aux_r = strategy.execute("fse_dp", params, x, moe, "swiglu")
     np.testing.assert_allclose(y_k, y_r, rtol=2e-5, atol=2e-5)
     np.testing.assert_allclose(aux_k, aux_r, rtol=1e-6)
 
