@@ -137,6 +137,44 @@ def check_moe_strategies(base, cur, tol, failures):
                         "refresh benchmarks/baselines/")
     print(f"BENCH_moe_strategies: auto={cur.get('auto_family')} "
           f"(baseline {base.get('auto_family')}), {matched} rows matched")
+    check_skewed_schedules(base, cur, tol, failures)
+
+
+def check_skewed_schedules(base, cur, tol, failures):
+    """Skewed-gating gate (deterministic simulation, no timing noise):
+    the dynamic (count-built) schedule must beat the static plan on a
+    majority of Zipf points, and neither side's simulated step time may
+    drift slower than the committed baseline beyond --tolerance."""
+    skewed = cur.get("skewed") or []
+    if not skewed:
+        failures.append("BENCH_moe_strategies: no skewed-gating rows — "
+                        "rerun benchmarks/jax_moe_strategies.py")
+        return
+    wins = sum(1 for r in skewed if r["win"])
+    if wins <= len(skewed) // 2:
+        failures.append(f"BENCH_moe_strategies[skewed]: dynamic schedule "
+                        f"won only {wins}/{len(skewed)} points "
+                        f"(needs a majority)")
+    base_rows = {(r["tokens"], r["zipf_s"], r["seed"]): r
+                 for r in (base.get("skewed") or [])}
+    matched = 0
+    for r in skewed:
+        b = base_rows.get((r["tokens"], r["zipf_s"], r["seed"]))
+        if b is None:
+            continue
+        matched += 1
+        for col in ("static_us", "dynamic_us"):
+            if b.get(col) and r[col] > b[col] * (1 + tol):
+                failures.append(
+                    f"BENCH_moe_strategies[skewed] tokens={r['tokens']} "
+                    f"zipf={r['zipf_s']} {col}: {b[col]:.1f} -> "
+                    f"{r[col]:.1f}us (+{r[col] / b[col] - 1:.0%} > "
+                    f"{tol:.0%})")
+    if base.get("skewed") and not matched:
+        failures.append("BENCH_moe_strategies[skewed]: no baseline rows "
+                        "matched — refresh benchmarks/baselines/")
+    print(f"BENCH_moe_strategies[skewed]: dynamic wins {wins}/{len(skewed)}"
+          f", {matched} rows matched vs baseline")
 
 
 def main(argv=None):

@@ -4,9 +4,14 @@ mesh (8 host devices — runs in a subprocess so the parent stays 1-device).
 
 Every strategy is reached through the execution-strategy registry
 (``repro.core.strategy``); the ``auto`` row lets the cross-family
-planner pick the winning family for the shape.  Emits a CSV plus
-``artifacts/bench/BENCH_moe_strategies.json``; the committed copy under
-``benchmarks/baselines/`` is the CI regression baseline
+planner pick the winning family for the shape.  A second, host-side
+sweep routes Zipf-skewed token loads through the chiplet trajectory
+simulation (``sim.modes.schedule_step_times``) and records the static
+(shape-only) vs dynamic (gating-count-built paired trajectory) step
+time per point — the regression gate requires the dynamic schedule to
+keep beating the static plan on a majority of skewed points.  Emits CSVs
+plus ``artifacts/bench/BENCH_moe_strategies.json``; the committed copy
+under ``benchmarks/baselines/`` is the CI regression baseline
 (``check_regression.py``).
 """
 from __future__ import annotations
@@ -20,6 +25,38 @@ import time
 from .common import emit
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+# (tokens_per_iter, zipf_s, seed) — low-batch decode through prefill-ish
+# iteration sizes, at two skew strengths, deterministic routing seeds
+SKEW_SWEEP = (
+    (16, 1.1, 0), (16, 1.5, 1),
+    (32, 1.1, 2), (32, 1.5, 3),
+    (128, 1.1, 4), (128, 1.5, 5),
+    (512, 1.1, 6), (512, 1.5, 7),
+)
+
+
+def skewed_schedule_rows():
+    """Static-vs-dynamic simulated step times on Zipf-routed gating."""
+    import numpy as np
+    from repro.sim import modes as sim_modes, workload
+    from repro.sim.hardware import PROTOTYPE_2X2, ModelSpec
+
+    spec = ModelSpec("skew-bench", 2048, 1408, 64, 6, 3)
+    rows = []
+    for tokens, zipf_s, seed in SKEW_SWEEP:
+        rng = np.random.default_rng(seed)
+        p = workload.sample_expert_probs(spec.num_experts, rng, zipf_s)
+        counts = workload.route_tokens(spec.num_experts, spec.top_k,
+                                       tokens, p, rng)
+        t = sim_modes.schedule_step_times(PROTOTYPE_2X2, spec, counts)
+        rows.append({"tokens": tokens, "zipf_s": zipf_s, "seed": seed,
+                     "active_experts": int((counts > 0).sum()),
+                     "static_us": t["static"] * 1e6,
+                     "dynamic_us": t["dynamic"] * 1e6,
+                     "dynamic_unpaired_us": t["dynamic_unpaired"] * 1e6,
+                     "win": bool(t["dynamic"] < t["static"])})
+    return rows
 
 _CHILD = r"""
 import os
@@ -111,6 +148,16 @@ def run():
          ["strategy", "weight_B_per_dev", "coll_total_B", "all_to_all_B",
           "collective_permute_B", "all_gather_B", "all_reduce_B"])
 
+    skewed = skewed_schedule_rows()
+    emit("jax_moe_strategies_skewed",
+         [[r["tokens"], r["zipf_s"], r["active_experts"],
+           round(r["static_us"], 2), round(r["dynamic_us"], 2),
+           int(r["win"])] for r in skewed],
+         ["tokens", "zipf_s", "active_E", "static_us", "dynamic_us", "win"])
+    wins = sum(r["win"] for r in skewed)
+    print(f"# skewed gating: dynamic schedule wins {wins}/{len(skewed)} "
+          f"points")
+
     import jax
     payload = {
         "bench": "jax_moe_strategies",
@@ -120,6 +167,7 @@ def run():
         "auto_family": data["auto_family"],
         "shape": data["shape"],
         "rows": data["rows"],
+        "skewed": skewed,
     }
     os.makedirs(ART, exist_ok=True)
     path = os.path.join(ART, "BENCH_moe_strategies.json")

@@ -1,8 +1,9 @@
-from . import autotune, gating, policies, strategy
+from . import autotune, gating, policies, strategy, trajectory
 from .autotune import HardwareProfile, Plan, plan_moe, use_autotune
 from .strategy import (ExecutionSpec, MoEStrategy, StrategyContext,
                        available, execute, get_strategy, plan_family,
                        register)
+from .trajectory import LoadTracker, Schedule, build_schedule
 # deprecated one-line shims (warn on call) — the registry is the API
 from .fse_dp import fse_dp_moe_3d
 from .baselines import ep_moe_3d, tp_moe_3d

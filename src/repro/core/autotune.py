@@ -175,6 +175,31 @@ def _cap(tokens: int, top_k: int, E: int, cf: float) -> int:
     return moe_capacity_rows(tokens, top_k, E, cf)
 
 
+def load_rows(E: int, C: int, assignments: float,
+              load: Optional[Tuple[float, ...]] = None
+              ) -> Tuple[float, int]:
+    """(effective expert rows, active expert count) under a load vector.
+
+    ``load`` is a normalized per-expert activation-share vector (e.g.
+    from ``trajectory.normalized_load`` of observed gating counts).
+    ``None`` keeps the shape-only padded-buffer model: every expert
+    computes its full capacity ``C`` — exactly the pre-load-vector cost
+    model, bit for bit.  With a load vector the model prices the
+    trajectory-scheduled execution instead: expert ``e`` computes
+    ``min(C, assignments·load_e)`` rows and idle experts (< 0.5
+    expected rows) skip their weight load entirely.
+    """
+    if load is None:
+        return float(E * C), E
+    rows = 0.0
+    active = 0
+    for share in load:
+        r = min(float(C), assignments * float(share))
+        rows += r
+        active += r >= 0.5
+    return rows, max(1, active)
+
+
 def feasible_modes(B: int, S: int, P: int) -> Tuple[str, ...]:
     """Which SPMD layouts lower for this global token shape."""
     out = []
@@ -194,7 +219,8 @@ def feasible_modes(B: int, S: int, P: int) -> Tuple[str, ...]:
 def mode_cost(mode: str, B: int, S: int, d: int, E: int, de: int,
               top_k: int, cf: float, n_mats: int, P: int,
               profile: HardwareProfile, micro_slices: int,
-              dtype_bytes: int = 2) -> Dict[str, float]:
+              dtype_bytes: int = 2,
+              load: Optional[Tuple[float, ...]] = None) -> Dict[str, float]:
     """Predicted per-device seconds for one MoE layer under ``mode``.
 
     Mirrors the SPMD bodies in ``core.fse_dp`` term by term:
@@ -205,6 +231,12 @@ def mode_cost(mode: str, B: int, S: int, d: int, E: int, de: int,
              plus an input all-gather and an fp32 output psum;
     slice  — weights stationary, every rank routes/computes ALL tokens on
              its d_expert/P slice, fp32 output psum (no ring).
+
+    ``load`` (a normalized per-expert load vector, see :func:`load_rows`)
+    switches the expert terms from the shape-only padded-capacity model
+    to the observed-gating trajectory model: rows scale with the actual
+    per-expert assignments and only *active* experts pay weight
+    ring/DDR traffic.  ``None`` is bit-identical to the pre-load model.
     """
     T = B * S
     wb = ab = dtype_bytes
@@ -214,9 +246,10 @@ def mode_cost(mode: str, B: int, S: int, d: int, E: int, de: int,
     if mode in ("stream", "index"):
         T_loc = T / P
         C = _cap(int(math.ceil(T_loc)), top_k, E, cf)
-        # ring covers all P slices => full d_expert on local capacity rows
-        expert_flops = 2.0 * n_mats * E * C * d * de
-        ring_bytes = n_mats * E * d * de_loc * wb * P      # P·M sends of de_loc/M
+        rows, active = load_rows(E, C, T_loc * top_k, load)
+        # ring covers all P slices => full d_expert on local routed rows
+        expert_flops = 2.0 * n_mats * rows * d * de
+        ring_bytes = n_mats * active * d * de_loc * wb * P  # P·M sends of de_loc/M
         t_ring = ring_bytes / profile.link_bw + P * M * profile.link_latency
         t_fill = ring_bytes / (P * M) / profile.link_bw    # pipeline fill (1 slice)
         # ring quantization: a micro-slice must be fully resident before it
@@ -227,7 +260,8 @@ def mode_cost(mode: str, B: int, S: int, d: int, E: int, de: int,
     else:
         T_loc = T                                          # replicated routing
         C = _cap(T, top_k, E, cf)
-        expert_flops = 2.0 * n_mats * E * C * d * de_loc   # local slice only
+        rows, active = load_rows(E, C, T_loc * top_k, load)
+        expert_flops = 2.0 * n_mats * rows * d * de_loc    # local slice only
         ring_bytes = 0.0
         t_ring = 0.0
         t_fill = 0.0
@@ -237,9 +271,9 @@ def mode_cost(mode: str, B: int, S: int, d: int, E: int, de: int,
     dispatch_flops = 2.0 * T_loc * E * C * d * 2 + 2.0 * T_loc * d * E
     t_comp = (expert_flops + dispatch_flops) / profile.peak_flops
 
-    # memory: the local weight shard streams HBM/DDR->compute once;
-    # activations stay resident (chiplet SRAM / kernel VMEM tiles)
-    hbm = n_mats * E * d * de_loc * wb
+    # memory: the local weight shard streams HBM/DDR->compute once —
+    # only active experts' slices under a load vector
+    hbm = n_mats * active * d * de_loc * wb
     t_hbm = hbm / profile.mem_bw
 
     # collective extras for replicated-token layouts (ring collectives)
@@ -260,7 +294,8 @@ def mode_cost(mode: str, B: int, S: int, d: int, E: int, de: int,
 
 def ep_cost(B: int, S: int, d: int, E: int, de: int, top_k: int, cf: float,
             n_mats: int, P: int, profile: HardwareProfile,
-            dtype_bytes: int = 2) -> Dict[str, float]:
+            dtype_bytes: int = 2,
+            load: Optional[Tuple[float, ...]] = None) -> Dict[str, float]:
     """Predicted per-device seconds for one MoE layer under the EP
     (expert-parallel) baseline family — the cross-family referee for the
     ``auto`` strategy (``repro.core.strategy``).
@@ -277,18 +312,20 @@ def ep_cost(B: int, S: int, d: int, E: int, de: int, top_k: int, cf: float,
     T_loc = T / P
     C = _cap(int(math.ceil(T_loc)), top_k, E, cf)
     E_loc = E / P
-    # every device computes its E/P experts over the P*C rows gathered
-    # from all ranks — same total expert flops as the ring modes
-    expert_flops = 2.0 * n_mats * E_loc * (P * C) * d * de
+    rows, active = load_rows(E, C, T_loc * top_k, load)
+    # every device computes its E/P experts over the rows gathered from
+    # all P ranks — same total expert flops as the ring modes (under a
+    # load vector, `rows` already averages the per-rank routed rows, so
+    # a device's E/P share of the P-rank total is `rows` itself)
+    expert_flops = 2.0 * n_mats * (rows / E) * E_loc * P * d * de
     dispatch_flops = 2.0 * T_loc * E * C * d * 2 + 2.0 * T_loc * d * E
     t_comp = (expert_flops + dispatch_flops) / profile.peak_flops
     # local weight shard (E/P full experts — same bytes as a d_expert/P
-    # slice of all experts) streams DDR/HBM once
-    hbm = n_mats * E_loc * d * de * wb
+    # slice of all experts) streams DDR/HBM once; idle experts skip
+    hbm = n_mats * (active / E) * E_loc * d * de * wb
     t_hbm = hbm / profile.mem_bw
-    # two all-to-alls of the (E, C, d) dispatch buffer; (P-1)/P of the
-    # rows cross D2D links
-    a2a_bytes = 2.0 * (P - 1) / P * E * C * d * ab
+    # two all-to-alls of the routed dispatch rows; (P-1)/P cross D2D
+    a2a_bytes = 2.0 * (P - 1) / P * rows * d * ab
     t_a2a = a2a_bytes / profile.link_bw + 2 * (P - 1) * profile.link_latency
     total = max(t_comp, t_hbm) + t_a2a
     return {"total_s": total, "compute_s": t_comp, "hbm_s": t_hbm,
@@ -569,7 +606,8 @@ def _plan_moe_cached(B: int, S: int, d: int, E: int, de: int, top_k: int,
                      cf: float, n_mats: int, micro_cfg: int, P: int,
                      activation: str, profile: HardwareProfile,
                      dtype_bytes: int, level: str,
-                     force_mode: Optional[str]) -> Plan:
+                     force_mode: Optional[str],
+                     load: Optional[Tuple[float, ...]]) -> Plan:
     if level == "off" and force_mode is None:
         return fallback_plan(B, S, P, micro_cfg)
 
@@ -589,7 +627,7 @@ def _plan_moe_cached(B: int, S: int, d: int, E: int, de: int, top_k: int,
             if mode in ("stream", "index") else [1]
         for M in micro_cands:
             c = mode_cost(mode, B, S, d, E, de, top_k, cf, n_mats, P,
-                          profile, M, dtype_bytes)
+                          profile, M, dtype_bytes, load)
             if mode_best is None or c["total_s"] < mode_best[0]:
                 mode_best = (c["total_s"], M)
         per_mode[mode] = mode_best[0]
@@ -630,23 +668,29 @@ def _plan_moe_cached(B: int, S: int, d: int, E: int, de: int, top_k: int,
 def plan_moe(B: int, S: int, d_model: int, moe, activation: str, P: int,
              *, profile: Optional[HardwareProfile] = None,
              dtype_bytes: int = 2, level: Optional[str] = None,
-             mode: Optional[str] = None) -> Plan:
+             mode: Optional[str] = None,
+             load: Optional[Tuple[float, ...]] = None) -> Plan:
     """Score all feasible (mode, micro_slices, tiles) and return the winner.
 
     ``moe`` is a :class:`repro.configs.base.MoEConfig`; ``P`` the model-axis
     size.  ``mode`` forces a specific execution mode (still optimizing the
-    remaining knobs) — used by benchmarks and the parity tests.  Pure
-    Python — call freely at trace time; results are memoized.
+    remaining knobs) — used by benchmarks and the parity tests.  ``load``
+    conditions the cost model on a normalized per-expert load vector
+    (dynamic trajectory scheduling; ``None`` = the uniform shape-only
+    model).  Pure Python — call freely at trace time; results are
+    memoized.
     """
     level = level or autotune_level()
     profile = profile or HardwareProfile.detect()
     n_mats = 3 if activation == "swiglu" else 2
+    if load is not None:
+        load = tuple(float(v) for v in load)
     return _plan_moe_cached(int(B), int(S), int(d_model),
                             int(moe.num_experts), int(moe.d_expert),
                             int(moe.top_k), float(moe.capacity_factor),
                             n_mats, int(moe.micro_slices), int(P),
                             activation, profile, int(dtype_bytes), level,
-                            mode)
+                            mode, load)
 
 
 _PICK_MODE_WARNED = False

@@ -31,20 +31,35 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import MoEConfig
 from repro.parallel import meshctx
 from . import gating
-from .fse_dp import _expert_partial, shard_map, pmean_all
+from .fse_dp import _expert_partial, _route, shard_map, pmean_all
 
 
 def _capacity(T_loc: int, moe: MoEConfig) -> int:
     return moe.capacity_rows(T_loc)
 
 
+def _local_trajectory(schedule, counts_fn):
+    """Schedule stage for the baseline bodies: the local expert-axis
+    trajectory permutation, or ``None`` for static (untouched path)."""
+    from . import trajectory
+    return trajectory.resolve_order(schedule, counts_fn)
+
+
 # ---------------------------------------------------------------------------
 # EP — all-to-all dispatch to expert owners
 # ---------------------------------------------------------------------------
 
-def _local_ep(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes):
-    """x: (B_loc, S_loc, d) seq-sharded. w_*: (E_loc, d, de) expert-sharded."""
+def _local_ep(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes,
+              schedule=None):
+    """x: (B_loc, S_loc, d) seq-sharded. w_*: (E_loc, d, de) expert-sharded.
+
+    Pipeline: route local rows -> schedule (dynamic: a trajectory over
+    this rank's *owned* experts, ordered by the psum'd global gating
+    counts) -> all-to-all dispatch -> grouped FFN -> all-to-all return
+    -> combine.  The trajectory permutes the owned-expert batch axis
+    around the FFN only, so outputs are bit-identical to static."""
     from repro.models.moe import dispatch_masks
+    from . import trajectory
     B, S, d = x.shape
     E = moe.num_experts
     E_loc = E // P_
@@ -52,7 +67,19 @@ def _local_ep(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes):
     T_loc = x2d.shape[0]
     C = _capacity(T_loc, moe)
 
-    routing = gating.route({"w_router": wr}, x2d, top_k=moe.top_k)
+    routing = _route(wr, x2d, moe)
+
+    def _owned_counts():
+        counts = jax.lax.psum(gating.expert_token_counts(routing), axis)
+        r = jax.lax.axis_index(axis)
+        return jax.lax.dynamic_slice_in_dim(counts, r * E_loc, E_loc, 0)
+
+    # a host-built Schedule.order indexes GLOBAL experts; this body
+    # schedules its owned E_loc shard, so a dynamic schedule always
+    # derives the local trajectory in-graph from the psum'd counts
+    order = None
+    if schedule is not None and schedule.dynamic:
+        order = trajectory.traced_order(_owned_counts())
     dispatch, combine = dispatch_masks(routing, T_loc, E, C)          # (T,E,C)
     xsend = jnp.einsum("tec,td->ecd", dispatch.astype(x2d.dtype), x2d)  # (E,C,d)
     xsend = xsend.reshape(P_, E_loc, C, d)
@@ -60,7 +87,14 @@ def _local_ep(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes):
     xrecv = jax.lax.all_to_all(xsend, axis, split_axis=0, concat_axis=0, tiled=True)
     xrecv = xrecv.reshape(P_, E_loc, C, d).transpose(1, 0, 2, 3).reshape(E_loc, P_ * C, d)
 
-    ye = _expert_partial(xrecv, None if w_g is None else w_g, w_u, w_d, activation)
+    if order is None:
+        ye = _expert_partial(xrecv, None if w_g is None else w_g, w_u, w_d,
+                             activation)
+    else:
+        xrecv, w_g, w_u, w_d = trajectory.apply_order(order, xrecv, w_g,
+                                                      w_u, w_d)
+        ye = _expert_partial(xrecv, w_g, w_u, w_d, activation)
+        ye = trajectory.restore_order(order, ye)
     ye = ye.astype(x.dtype)
 
     ysend = ye.reshape(E_loc, P_, C, d).transpose(1, 0, 2, 3).reshape(P_ * E_loc, C, d)
@@ -73,12 +107,17 @@ def _local_ep(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes):
     return y.reshape(B, S, d).astype(x.dtype), aux
 
 
-def moe_ep(params, x, moe: MoEConfig, activation, *, axis="model"):
+def moe_ep(params, x, moe: MoEConfig, activation, *, axis="model",
+           schedule=None, routing=None):
     mesh = meshctx.get_mesh()
     P_ = 1 if mesh is None or axis not in mesh.axis_names else mesh.shape[axis]
     if P_ == 1 or moe.num_experts % P_:
         from .fse_dp import moe_fse_dp
-        return moe_fse_dp(params, x, moe, activation, axis=axis)
+        return moe_fse_dp(params, x, moe, activation, axis=axis,
+                          schedule=schedule, routing=routing)
+    if routing is not None:
+        raise ValueError("precomputed Routing is only supported on the "
+                         "single-device path")
     batch = meshctx.batch_axes(mesh, axis)
     import numpy as _np
     bsz = int(_np.prod([mesh.shape[a] for a in batch])) if batch else 1
@@ -96,9 +135,10 @@ def moe_ep(params, x, moe: MoEConfig, activation, *, axis="model"):
         x_spec = P((tuple(batch) if batch else ()) + (axis,), None, None)
     else:
         from .fse_dp import moe_fse_dp
-        return moe_fse_dp(params, x, moe, activation, axis=axis)
+        return moe_fse_dp(params, x, moe, activation, axis=axis,
+                          schedule=schedule)
     w_g = params.get("w_gate")
-    fn = functools.partial(_local_ep, moe=moe, activation=activation, axis=axis, P_=P_, pm_axes=tuple(mesh.axis_names))
+    fn = functools.partial(_local_ep, moe=moe, activation=activation, axis=axis, P_=P_, pm_axes=tuple(mesh.axis_names), schedule=schedule)
     if w_g is None:
         def fn2(x, wr, wu, wd):
             return fn(x, wr, None, wu, wd)
@@ -121,16 +161,28 @@ def moe_ep(params, x, moe: MoEConfig, activation, *, axis="model"):
 # TP — d_expert sharding, replicated tokens, all-reduce combine
 # ---------------------------------------------------------------------------
 
-def _local_tp(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes):
+def _local_tp(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes,
+              schedule=None):
+    """Pipeline: route (replicated tokens) -> schedule -> dispatch ->
+    sliced FFN -> psum combine.  The dynamic trajectory spans all E
+    experts (weights are d_expert-sliced, not expert-sharded)."""
     from repro.models.moe import dispatch_masks
+    from . import trajectory
     B, S, d = x.shape
     x2d = x.reshape(B * S, d)
     T = x2d.shape[0]
     C = _capacity(T, moe)
-    routing = gating.route({"w_router": wr}, x2d, top_k=moe.top_k)
+    routing = _route(wr, x2d, moe)
+    order = _local_trajectory(
+        schedule, lambda: gating.expert_token_counts(routing))
     dispatch, combine = dispatch_masks(routing, T, moe.num_experts, C)
     xe = jnp.einsum("tec,td->ecd", dispatch.astype(x2d.dtype), x2d)
-    ye = _expert_partial(xe, w_g, w_u, w_d, activation)
+    if order is None:
+        ye = _expert_partial(xe, w_g, w_u, w_d, activation)
+    else:
+        xe, w_g, w_u, w_d = trajectory.apply_order(order, xe, w_g, w_u, w_d)
+        ye = trajectory.restore_order(
+            order, _expert_partial(xe, w_g, w_u, w_d, activation))
     y = jnp.einsum("tec,ecd->td", combine.astype(jnp.float32), ye)
     y = jax.lax.psum(y, axis)
     aux = gating.aux_load_balance_loss(routing, moe.num_experts)
@@ -138,19 +190,24 @@ def _local_tp(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_, pm_axes):
     return y.reshape(B, S, d).astype(x.dtype), aux
 
 
-def moe_tp(params, x, moe: MoEConfig, activation, *, axis="model"):
+def moe_tp(params, x, moe: MoEConfig, activation, *, axis="model",
+           schedule=None, routing=None):
     mesh = meshctx.get_mesh()
     P_ = 1 if mesh is None or axis not in mesh.axis_names else mesh.shape[axis]
     if P_ == 1:
         from .fse_dp import moe_fse_dp
-        return moe_fse_dp(params, x, moe, activation, axis=axis)
+        return moe_fse_dp(params, x, moe, activation, axis=axis,
+                          schedule=schedule, routing=routing)
+    if routing is not None:
+        raise ValueError("precomputed Routing is only supported on the "
+                         "single-device path")
     batch = meshctx.batch_axes(mesh, axis)
     import numpy as _np
     bsz = int(_np.prod([mesh.shape[a] for a in batch])) if batch else 1
     if x.shape[0] % max(bsz, 1):
         batch = None
     x_spec = P(batch, None, None)
-    fn = functools.partial(_local_tp, moe=moe, activation=activation, axis=axis, P_=P_, pm_axes=tuple(mesh.axis_names))
+    fn = functools.partial(_local_tp, moe=moe, activation=activation, axis=axis, P_=P_, pm_axes=tuple(mesh.axis_names), schedule=schedule)
     w_g = params.get("w_gate")
     if w_g is None:
         def fn2(x, wr, wu, wd):

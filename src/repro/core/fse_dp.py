@@ -19,6 +19,13 @@ TPU-native realization of expert streaming:
   activation commutes with the d_expert split), which is the paper's
   virtualization argument: trajectory timing/ordering is immaterial.
 
+Each shard_map body is one pass of the shared route -> schedule ->
+dispatch -> combine pipeline (``repro.core.trajectory``): under a
+dynamic schedule the dispatched expert rows and arriving weight
+micro-slices are reindexed into the gating-count-built paired-load
+trajectory (and restored before the combine), so dynamic scheduling
+reorders per-expert execution without changing a single bit of output.
+
 Three execution modes, chosen statically from the token layout
 (paper Fig. 3(a) vs 3(b)):
 
@@ -99,12 +106,22 @@ def _expert_partial(xe, w_g, w_u, w_d, activation, kopts=None):
 
 
 def _ring_stream(xe, w_g, w_u, w_d, activation, axis, P_, micro_slices,
-                 kopts=None):
+                 kopts=None, order=None):
     """Accumulate full expert outputs for local dispatched tokens ``xe``
     while streaming weight micro-slices around the ``axis`` ring.
 
     w_*: local shard (E, d, de_loc) / (E, de_loc, d).
+
+    ``order`` is an optional expert-trajectory permutation (dynamic
+    schedule, ``core.trajectory``): the dispatched rows and each
+    arriving weight micro-slice are reindexed into trajectory order so
+    the grouped-GEMM grid walks hot/cold experts interleaved, and the
+    accumulated outputs are restored to canonical order afterwards —
+    per-expert compute is independent, so values are bit-identical to
+    the static path.  The circulated slices stay in canonical order
+    (each rank applies its *own* trajectory locally).
     """
+    from . import trajectory
     E, C, d = xe.shape
     de_loc = w_g.shape[-1] if w_g is not None else w_u.shape[-1]
     M = max(1, min(micro_slices, de_loc))
@@ -112,6 +129,8 @@ def _ring_stream(xe, w_g, w_u, w_d, activation, axis, P_, micro_slices,
         M -= 1  # largest feasible micro-slice count <= requested
     mic = de_loc // M
 
+    if order is not None:
+        (xe,) = trajectory.apply_order(order, xe)
     ring = [(i, (i + 1) % P_) for i in range(P_)]
     # zeros_like inherits xe's varying-manual-axes so the scan carry typechecks
     acc = jnp.zeros_like(xe, jnp.float32)
@@ -132,43 +151,75 @@ def _ring_stream(xe, w_g, w_u, w_d, activation, axis, P_, micro_slices,
             ng = jax.lax.ppermute(cg, axis, ring) if cg is not None else None
             nu = jax.lax.ppermute(cu, axis, ring)
             nd = jax.lax.ppermute(cd, axis, ring)
-            acc = acc + _expert_partial(xe, cg, cu, cd, activation, kopts)
+            if order is None:
+                kg, ku, kd = cg, cu, cd
+            else:
+                kg, ku, kd = trajectory.apply_order(order, cg, cu, cd)
+            acc = acc + _expert_partial(xe, kg, ku, kd, activation, kopts)
             return (acc, (ng, nu, nd)), None
 
         (acc, _), _ = jax.lax.scan(step, (acc, cur), None, length=P_)
+    if order is not None:
+        acc = trajectory.restore_order(order, acc)
     return acc
 
 
 # ---------------------------------------------------------------------------
-# shard_map bodies
+# shard_map bodies — each one is the route -> schedule -> dispatch ->
+# combine pipeline (repro.core.trajectory) over its SPMD dataflow
 # ---------------------------------------------------------------------------
 
-def _dispatch(x2d, routing, moe):
-    """(xe, combiner) — combiner(ye fp32 (E,C,d)) -> y (T,d) fp32."""
+def _route(wr, x2d, moe):
+    """Pipeline *route* stage: Routing for the local token rows."""
+    return gating.route({"w_router": wr}, x2d, top_k=moe.top_k)
+
+
+def _schedule_order(schedule, routing):
+    """Pipeline *schedule* stage: the expert-trajectory permutation, or
+    ``None`` for a static schedule (identity trajectory, untouched fast
+    path).  A dynamic schedule without a host-built order derives it
+    in-graph from this rank's own routing counts."""
+    from . import trajectory
+    return trajectory.resolve_order(
+        schedule, lambda: gating.expert_token_counts(routing))
+
+
+def _dispatch(x2d, routing, moe, order=None):
+    """Pipeline *dispatch* stage: (xe, combiner) — combiner(ye fp32
+    (E,C,d)) -> y (T,d) fp32.  ``order`` reindexes the dispatched rows
+    into trajectory order; the combiner always consumes canonical-order
+    outputs (callers restore before combining)."""
     from repro.models.moe import (capacity_of, dispatch_masks, dispatch_tables,
                                   gather_dispatch, scatter_combine,
                                   sorted_dispatch_enabled)
+    from . import trajectory
     T = x2d.shape[0]
     C = capacity_of(T, moe)
     if sorted_dispatch_enabled():
         idx, wts = dispatch_tables(routing, T, moe.num_experts, C)
         xe = gather_dispatch(x2d, idx)
+        if order is not None:
+            (xe,) = trajectory.apply_order(order, xe)
         return xe, lambda ye: scatter_combine(ye, idx, wts, T)
     dispatch, combine = dispatch_masks(routing, T, moe.num_experts, C)
     xe = jnp.einsum("tec,td->ecd", dispatch.astype(x2d.dtype), x2d)
+    if order is not None:
+        (xe,) = trajectory.apply_order(order, xe)
     comb = lambda ye: jnp.einsum("tec,ecd->td", combine.astype(jnp.float32), ye)
     return xe, comb
 
 
 def _local_moe_stream(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_,
-                      pm_axes, micro_slices=None, kopts=None):
+                      pm_axes, micro_slices=None, kopts=None, schedule=None):
     """x: (B_loc, S_loc, d) — tokens stationary, weights stream."""
     B, S, d = x.shape
     x2d = x.reshape(B * S, d)
-    routing = gating.route({"w_router": wr}, x2d, top_k=moe.top_k)
+    routing = _route(wr, x2d, moe)
+    order = _schedule_order(schedule, routing)
+    # the ring applies the trajectory itself (per arriving micro-slice)
     xe, combine = _dispatch(x2d, routing, moe)
     ye = _ring_stream(xe, w_g, w_u, w_d, activation, axis, P_,
-                      micro_slices or moe.micro_slices, kopts)
+                      micro_slices or moe.micro_slices, kopts, order)
     y = combine(ye.reshape(moe.num_experts, -1, d))
     aux = gating.aux_load_balance_loss(routing, moe.num_experts)
     aux = pmean_all(aux, pm_axes)
@@ -176,7 +227,7 @@ def _local_moe_stream(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_,
 
 
 def _local_moe_index(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_,
-                     pm_axes, micro_slices=None, kopts=None):
+                     pm_axes, micro_slices=None, kopts=None, schedule=None):
     """x replicated over ``axis``: each rank handles a 1/P token slice,
     streams the weights, then all-gathers the outputs."""
     B, S, d = x.shape
@@ -185,10 +236,11 @@ def _local_moe_index(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_,
     T_loc = T // P_
     r = jax.lax.axis_index(axis)
     x_loc = jax.lax.dynamic_slice_in_dim(x2d, r * T_loc, T_loc, 0)
-    routing = gating.route({"w_router": wr}, x_loc, top_k=moe.top_k)
+    routing = _route(wr, x_loc, moe)
+    order = _schedule_order(schedule, routing)
     xe, combine = _dispatch(x_loc, routing, moe)
     ye = _ring_stream(xe, w_g, w_u, w_d, activation, axis, P_,
-                      micro_slices or moe.micro_slices, kopts)
+                      micro_slices or moe.micro_slices, kopts, order)
     y_loc = combine(ye.reshape(moe.num_experts, -1, d))
     # scatter-into-zeros + psum == all-gather, but provably replicated
     # under shard_map's varying-axes checker
@@ -200,14 +252,20 @@ def _local_moe_index(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_,
 
 
 def _local_moe_slice(x, wr, w_g, w_u, w_d, *, moe, activation, axis, P_,
-                     pm_axes, micro_slices=None, kopts=None):
+                     pm_axes, micro_slices=None, kopts=None, schedule=None):
     """Tiny-token fallback (paper Fig. 3(b) regime): weights stationary,
     every rank computes its d_expert slice for all tokens, psum combine."""
+    from . import trajectory
     B, S, d = x.shape
     x2d = x.reshape(B * S, d)
-    routing = gating.route({"w_router": wr}, x2d, top_k=moe.top_k)
-    xe, combine = _dispatch(x2d, routing, moe)
+    routing = _route(wr, x2d, moe)
+    order = _schedule_order(schedule, routing)
+    xe, combine = _dispatch(x2d, routing, moe, order)
+    if order is not None:
+        w_g, w_u, w_d = trajectory.apply_order(order, w_g, w_u, w_d)
     ye = _expert_partial(xe, w_g, w_u, w_d, activation, kopts)
+    if order is not None:
+        ye = trajectory.restore_order(order, ye)
     y = combine(ye)
     y = jax.lax.psum(y, axis)
     aux = gating.aux_load_balance_loss(routing, moe.num_experts)
@@ -225,7 +283,7 @@ from .autotune import pick_mode  # noqa: E402
 
 
 def moe_fse_dp(params, x, moe: MoEConfig, activation, *, axis="model",
-               plan=None):
+               plan=None, schedule=None, routing=None):
     """x: (B, S, d) global. Returns (y, aux). Falls back to the
     single-device capacity path when no model-parallel mesh is active.
 
@@ -237,16 +295,33 @@ def moe_fse_dp(params, x, moe: MoEConfig, activation, *, axis="model",
     heuristic — evaluated on the per-model-group batch (B/data-axis),
     which the shard_map bodies actually see, not the global B the old
     ``pick_mode`` call used; for shapes where those differ the per-group
-    choice is the one whose divisibility requirements actually hold."""
+    choice is the one whose divisibility requirements actually hold.
+
+    ``schedule`` (a ``core.trajectory.Schedule``) selects the expert
+    trajectory: ``None``/static is the untouched fast path; dynamic
+    reindexes per-expert compute into paired-load order (bit-identical
+    outputs, reordered execution).  A schedule that carries a load-aware
+    plan supplies it when no explicit ``plan`` is given (an explicit
+    plan always wins).  ``routing`` pre-computes the route stage —
+    only the single-device fallback accepts it (the distributed bodies
+    route their local token rows inside ``shard_map``)."""
+    if schedule is not None and schedule.plan is not None and plan is None:
+        plan = schedule.plan
     mesh = meshctx.get_mesh()
     P_ = 1 if mesh is None or axis not in mesh.axis_names else mesh.shape[axis]
     if P_ == 1:
         from repro.models.moe import moe_capacity
         shape = x.shape
         x2d = x.reshape(-1, shape[-1])
-        routing = gating.route(params["router"], x2d, top_k=moe.top_k)
-        y = moe_capacity(params, x2d, routing, moe, activation)
+        if routing is None:
+            routing = gating.route(params["router"], x2d, top_k=moe.top_k)
+        y = moe_capacity(params, x2d, routing, moe, activation,
+                         schedule=schedule)
         return y.reshape(shape), gating.aux_load_balance_loss(routing, moe.num_experts)
+    if routing is not None:
+        raise ValueError("precomputed Routing is only supported on the "
+                         "single-device path; distributed bodies route "
+                         "their local token rows inside shard_map")
 
     B, S, d = x.shape
     batch = meshctx.batch_axes(mesh, axis)
@@ -277,7 +352,8 @@ def moe_fse_dp(params, x, moe: MoEConfig, activation, *, axis="model",
 
     fn = functools.partial(body, moe=moe, activation=activation, axis=axis,
                            P_=P_, pm_axes=tuple(mesh.axis_names),
-                           micro_slices=plan.micro_slices, kopts=kopts)
+                           micro_slices=plan.micro_slices, kopts=kopts,
+                           schedule=schedule)
     w_g = params.get("w_gate")
     if w_g is None:
         # relu2/gelu experts: no gate projection; reuse w_up spec slot

@@ -47,6 +47,12 @@ def aux_load_balance_loss(routing: Routing, num_experts: int) -> jnp.ndarray:
     return num_experts * jnp.sum(f * p)
 
 
-def expert_token_counts(routing: Routing) -> jnp.ndarray:
-    """(E,) number of tokens activating each expert (the paper's n_e)."""
-    return (routing.combine > 0).sum(0)
+def expert_token_counts(routing: Routing, mask=None) -> jnp.ndarray:
+    """(E,) number of tokens activating each expert (the paper's n_e).
+
+    ``mask`` restricts the count to a boolean (T,) subset of the routed
+    rows — e.g. the serving engine counting only its active slots."""
+    assign = routing.combine > 0                              # (T,E)
+    if mask is not None:
+        assign = assign & jnp.asarray(mask)[:, None]
+    return assign.sum(0)

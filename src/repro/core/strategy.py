@@ -7,7 +7,15 @@ string ``impl`` names:
 
 * :class:`MoEStrategy` — the protocol every execution family
   implements: ``plan(ctx) -> Plan`` (pure, trace-time) and
-  ``execute(params, x, moe, activation, plan) -> (y, aux)``;
+  ``execute(params, x, moe, activation, plan) -> (y, aux)``, where
+  ``execute`` is the family's realization of the shared four-stage
+  pipeline **route -> schedule -> dispatch -> combine**
+  (``repro.core.trajectory``): routing is computed once (or accepted
+  precomputed via ``routing=``), the schedule stage turns the routing's
+  ``expert_token_counts`` into an expert trajectory when
+  ``ExecutionSpec.schedule == "dynamic"`` (or consumes a host-built
+  ``trajectory.Schedule``), and dispatch/combine bracket the family's
+  dataflow (ring stream, all-to-all, psum, capacity gather);
 * a named **registry** (:func:`register` / :func:`get_strategy`):
   ``fse_dp`` (the paper's expert streaming), ``ep`` / ``tp`` (the
   baselines), ``capacity`` / ``dense`` (single-device paths), and
@@ -96,6 +104,7 @@ class ExecutionSpec:
     train: Optional[str] = None
     layer_overrides: Tuple[Tuple[int, str], ...] = ()
     autotune: Optional[str] = None          # off | analytic | measured
+    schedule: Optional[str] = None          # static | dynamic (None=static)
     use_kernels: Optional[bool] = None      # None = ambient kernels toggle
     sorted_dispatch: Optional[bool] = None  # None = ambient dispatch mode
 
@@ -104,6 +113,9 @@ class ExecutionSpec:
                            _freeze_overrides(self.layer_overrides))
         if self.autotune not in (None, "off", "analytic", "measured"):
             raise ValueError(f"unknown autotune level {self.autotune!r}")
+        if self.schedule not in (None, "static", "dynamic"):
+            raise ValueError(f"unknown schedule policy {self.schedule!r} "
+                             f"(want 'static' or 'dynamic')")
 
     # ---- resolution ---------------------------------------------------
 
@@ -161,7 +173,7 @@ class ExecutionSpec:
         if self.layer_overrides:
             out["layer_overrides"] = {str(k): v
                                       for k, v in self.layer_overrides}
-        for f in ("autotune", "use_kernels", "sorted_dispatch"):
+        for f in ("autotune", "schedule", "use_kernels", "sorted_dispatch"):
             if getattr(self, f) is not None:
                 out[f] = getattr(self, f)
         return out
@@ -223,10 +235,13 @@ class StrategyContext:
     dtype_bytes: int = 2
     level: Optional[str] = None
     profile: Optional[HardwareProfile] = None
+    load: Optional[Tuple[float, ...]] = None  # per-expert load shares
 
     @classmethod
     def from_inputs(cls, x, moe: MoEConfig, activation: str,
-                    axis: str = "model") -> "StrategyContext":
+                    axis: str = "model", *,
+                    load: Optional[Tuple[float, ...]] = None
+                    ) -> "StrategyContext":
         import jax.numpy as jnp
         from repro.parallel import meshctx
         mesh = meshctx.get_mesh()
@@ -242,7 +257,7 @@ class StrategyContext:
                 B //= bsz
         return cls(B=int(B), S=int(S), d_model=int(d), moe=moe,
                    activation=activation, P=int(P_),
-                   dtype_bytes=jnp.dtype(x.dtype).itemsize)
+                   dtype_bytes=jnp.dtype(x.dtype).itemsize, load=load)
 
 
 @runtime_checkable
@@ -256,8 +271,13 @@ class MoEStrategy(Protocol):
         ...
 
     def execute(self, params, x, moe: MoEConfig, activation: str,
-                plan: Optional[Plan] = None, *, axis: str = "model"):
-        """x: (B, S, d) global. Returns ``(y, aux)``."""
+                plan: Optional[Plan] = None, *, axis: str = "model",
+                routing=None, schedule=None):
+        """x: (B, S, d) global. Returns ``(y, aux)``.
+
+        One route -> schedule -> dispatch -> combine pass: ``routing``
+        pre-computes the route stage (single-device strategies only),
+        ``schedule`` the schedule stage (``trajectory.Schedule``)."""
         ...
 
 
@@ -287,14 +307,23 @@ def available() -> Tuple[str, ...]:
 
 def execute(name_or_spec, params, x, moe: MoEConfig, activation: str, *,
             plan: Optional[Plan] = None, axis: str = "model",
-    phase: Optional[str] = None, layer: Optional[int] = None):
+            phase: Optional[str] = None, layer: Optional[int] = None,
+            routing=None, schedule=None):
     """Functional entry: run one MoE layer under a strategy name or an
-    :class:`ExecutionSpec`.  Returns ``(y, aux)``."""
+    :class:`ExecutionSpec`.  Returns ``(y, aux)``.
+
+    ``routing`` / ``schedule`` pre-compute the pipeline's route and
+    schedule stages; with neither, a spec whose ``schedule`` field is
+    ``"dynamic"`` derives the trajectory in-graph."""
     spec = ExecutionSpec.coerce(name_or_spec)
     name = spec.resolve(phase=phase, layer=layer)
+    if schedule is None and spec.schedule == "dynamic":
+        from . import trajectory
+        schedule = trajectory.DYNAMIC
     with spec.scope():
         return get_strategy(name).execute(params, x, moe, activation, plan,
-                                          axis=axis)
+                                          axis=axis, routing=routing,
+                                          schedule=schedule)
 
 
 _ENTRY_WARNED: set = set()
@@ -324,8 +353,13 @@ def ep_feasible(B: int, S: int, E: int, P: int) -> bool:
 def family_costs(B: int, S: int, d_model: int, moe: MoEConfig,
                  activation: str, P: int, *,
                  profile: Optional[HardwareProfile] = None,
-                 dtype_bytes: int = 2) -> Dict[str, float]:
+                 dtype_bytes: int = 2,
+                 load: Optional[Tuple[float, ...]] = None) -> Dict[str, float]:
     """Predicted seconds per candidate family for one MoE layer.
+
+    ``load`` conditions every family's cost curve on a normalized
+    per-expert load vector (``None`` = the uniform shape-only model —
+    bit-identical to the pre-load behavior).
 
     ``fse_dp`` is scored as the best *ring* (streaming) schedule —
     stream/index with per-mode-optimized micro-slices.  When no ring
@@ -347,15 +381,16 @@ def family_costs(B: int, S: int, d_model: int, moe: MoEConfig,
     if ring:
         out["fse_dp"] = min(
             autotune.mode_cost(m, B, S, d_model, E, de, k, cf, n_mats, P,
-                               profile, M, dtype_bytes)["total_s"]
+                               profile, M, dtype_bytes, load)["total_s"]
             for m in ring
             for M in autotune._micro_candidates(de_loc, moe.micro_slices))
     if ep_feasible(B, S, E, P):
         out["ep"] = autotune.ep_cost(B, S, d_model, E, de, k, cf, n_mats,
-                                     P, profile, dtype_bytes)["total_s"]
+                                     P, profile, dtype_bytes,
+                                     load)["total_s"]
     out["tp"] = autotune.mode_cost("slice", B, S, d_model, E, de, k, cf,
                                    n_mats, P, profile, 1,
-                                   dtype_bytes)["total_s"]
+                                   dtype_bytes, load)["total_s"]
     return out
 
 
@@ -368,7 +403,8 @@ def pick_family(costs: Dict[str, float]) -> str:
 def _plan_family_cached(B: int, S: int, d_model: int, moe: MoEConfig,
                         activation: str, P: int,
                         profile: Optional[HardwareProfile],
-                        dtype_bytes: int, level: str) -> Plan:
+                        dtype_bytes: int, level: str,
+                        load: Optional[Tuple[float, ...]]) -> Plan:
     if P == 1:
         return Plan(mode="capacity", family="capacity", micro_slices=1,
                     source="fallback")
@@ -378,13 +414,13 @@ def _plan_family_cached(B: int, S: int, d_model: int, moe: MoEConfig,
         # fallback_plan, which the deprecated pick_mode also wraps)
         return autotune.fallback_plan(B, S, P, moe.micro_slices)
     costs = family_costs(B, S, d_model, moe, activation, P,
-                         profile=profile, dtype_bytes=dtype_bytes)
+                         profile=profile, dtype_bytes=dtype_bytes, load=load)
     family = pick_family(costs)
     per_family = tuple(sorted((f, float(s)) for f, s in costs.items()))
     if family == "fse_dp":
         plan = autotune.plan_moe(B, S, d_model, moe, activation, P,
                                  profile=profile, dtype_bytes=dtype_bytes,
-                                 level=level)
+                                 level=level, load=load)
         return dataclasses.replace(plan, per_mode_s=plan.per_mode_s
                                    + per_family)
     return Plan(mode=family, family=family, micro_slices=1,
@@ -396,14 +432,19 @@ def plan_family(B: int, S: int, d_model: int, moe: MoEConfig,
                 activation: str, P: int, *,
                 profile: Optional[HardwareProfile] = None,
                 dtype_bytes: int = 2,
-                level: Optional[str] = None) -> Plan:
+                level: Optional[str] = None,
+                load: Optional[Tuple[float, ...]] = None) -> Plan:
     """Cross-family planner: score EP and TP cost curves alongside the
-    FSE-DP ring modes and return the winning family's Plan.  Pure
-    Python — call freely at trace time; memoized."""
+    FSE-DP ring modes and return the winning family's Plan.  ``load``
+    conditions the race on an observed per-expert load vector (dynamic
+    trajectory re-planning).  Pure Python — call freely at trace time;
+    memoized."""
     level = level or autotune.autotune_level()
+    if load is not None:
+        load = tuple(float(v) for v in load)
     return _plan_family_cached(int(B), int(S), int(d_model), moe,
                                activation, int(P), profile,
-                               int(dtype_bytes), level)
+                               int(dtype_bytes), level, load)
 
 
 # ---------------------------------------------------------------------------
@@ -412,16 +453,28 @@ def plan_family(B: int, S: int, d_model: int, moe: MoEConfig,
 
 
 class _SingleDevice:
-    """Shared machinery for the global-routing single-device paths."""
+    """Shared machinery for the global-routing single-device paths.
+
+    The pipeline stages are explicit here: :meth:`route` computes (or
+    accepts) the Routing, the executors hand the schedule stage down to
+    ``models.moe`` (which derives the trajectory from the routing's
+    counts when the schedule is dynamic), and dispatch/combine are the
+    capacity/dense dataflows in ``models.moe``.
+    """
 
     def plan(self, ctx: StrategyContext) -> Plan:
         return Plan(mode=self.name, family=self.name, micro_slices=1,
                     source="analytic")
 
-    def _route(self, params, x, moe):
+    def route(self, params, x, moe, routing=None):
         from repro.core import gating
         x2d = x.reshape(-1, x.shape[-1])
-        return x2d, gating.route(params["router"], x2d, top_k=moe.top_k)
+        if routing is None:
+            routing = gating.route(params["router"], x2d, top_k=moe.top_k)
+        return x2d, routing
+
+    # kept for any external callers of the old private helper
+    _route = route
 
 
 @register("dense")
@@ -429,11 +482,12 @@ class DenseStrategy(_SingleDevice):
     """Every expert on every token, masked combine (oracle; tests)."""
 
     def execute(self, params, x, moe, activation, plan=None, *,
-                axis="model"):
+                axis="model", routing=None, schedule=None):
         from repro.core import gating
         from repro.models import moe as moe_mod
-        x2d, routing = self._route(params, x, moe)
-        y = moe_mod.moe_dense(params, x2d, routing, activation)
+        x2d, routing = self.route(params, x, moe, routing)
+        y = moe_mod.moe_dense(params, x2d, routing, activation,
+                              schedule=schedule)
         return (y.reshape(x.shape),
                 gating.aux_load_balance_loss(routing, moe.num_experts))
 
@@ -443,11 +497,12 @@ class CapacityStrategy(_SingleDevice):
     """Switch-style capacity dispatch (efficient single-device XLA)."""
 
     def execute(self, params, x, moe, activation, plan=None, *,
-                axis="model"):
+                axis="model", routing=None, schedule=None):
         from repro.core import gating
         from repro.models import moe as moe_mod
-        x2d, routing = self._route(params, x, moe)
-        y = moe_mod.moe_capacity(params, x2d, routing, moe, activation)
+        x2d, routing = self.route(params, x, moe, routing)
+        y = moe_mod.moe_capacity(params, x2d, routing, moe, activation,
+                                 schedule=schedule)
         return (y.reshape(x.shape),
                 gating.aux_load_balance_loss(routing, moe.num_experts))
 
@@ -464,13 +519,14 @@ class FseDpStrategy:
                                  ctx.activation, ctx.P,
                                  profile=ctx.profile,
                                  dtype_bytes=ctx.dtype_bytes,
-                                 level=ctx.level)
+                                 level=ctx.level, load=ctx.load)
 
     def execute(self, params, x, moe, activation, plan=None, *,
-                axis="model"):
+                axis="model", routing=None, schedule=None):
         from repro.core import fse_dp
         return fse_dp.moe_fse_dp(params, x, moe, activation, axis=axis,
-                                 plan=plan)
+                                 plan=plan, routing=routing,
+                                 schedule=schedule)
 
 
 @register("ep")
@@ -486,14 +542,16 @@ class EpStrategy:
         c = autotune.ep_cost(ctx.B, ctx.S, ctx.d_model,
                              ctx.moe.num_experts, ctx.moe.d_expert,
                              ctx.moe.top_k, ctx.moe.capacity_factor,
-                             n_mats, ctx.P, profile, ctx.dtype_bytes)
+                             n_mats, ctx.P, profile, ctx.dtype_bytes,
+                             ctx.load)
         return Plan(mode="ep", family="ep", micro_slices=1,
                     predicted_s=c["total_s"], source="analytic")
 
     def execute(self, params, x, moe, activation, plan=None, *,
-                axis="model"):
+                axis="model", routing=None, schedule=None):
         from repro.core import baselines
-        return baselines.moe_ep(params, x, moe, activation, axis=axis)
+        return baselines.moe_ep(params, x, moe, activation, axis=axis,
+                                routing=routing, schedule=schedule)
 
 
 @register("tp")
@@ -508,14 +566,16 @@ class TpStrategy:
         c = autotune.mode_cost("slice", ctx.B, ctx.S, ctx.d_model,
                                ctx.moe.num_experts, ctx.moe.d_expert,
                                ctx.moe.top_k, ctx.moe.capacity_factor,
-                               n_mats, ctx.P, profile, 1, ctx.dtype_bytes)
+                               n_mats, ctx.P, profile, 1, ctx.dtype_bytes,
+                               ctx.load)
         return Plan(mode="tp", family="tp", micro_slices=1,
                     predicted_s=c["total_s"], source="analytic")
 
     def execute(self, params, x, moe, activation, plan=None, *,
-                axis="model"):
+                axis="model", routing=None, schedule=None):
         from repro.core import baselines
-        return baselines.moe_tp(params, x, moe, activation, axis=axis)
+        return baselines.moe_tp(params, x, moe, activation, axis=axis,
+                                routing=routing, schedule=schedule)
 
 
 @register("auto")
@@ -526,16 +586,24 @@ class AutoStrategy:
     def plan(self, ctx: StrategyContext) -> Plan:
         return plan_family(ctx.B, ctx.S, ctx.d_model, ctx.moe,
                            ctx.activation, ctx.P, profile=ctx.profile,
-                           dtype_bytes=ctx.dtype_bytes, level=ctx.level)
+                           dtype_bytes=ctx.dtype_bytes, level=ctx.level,
+                           load=ctx.load)
 
     def execute(self, params, x, moe, activation, plan=None, *,
-                axis="model"):
-        ctx = StrategyContext.from_inputs(x, moe, activation, axis)
+                axis="model", routing=None, schedule=None):
+        load = None if schedule is None else schedule.load
+        ctx = StrategyContext.from_inputs(x, moe, activation, axis, load=load)
         if ctx.P == 1:
             return get_strategy("capacity").execute(params, x, moe,
-                                                    activation, axis=axis)
-        plan = plan or self.plan(ctx)
+                                                    activation, axis=axis,
+                                                    routing=routing,
+                                                    schedule=schedule)
+        plan = plan or (schedule.plan if schedule is not None
+                        and schedule.plan is not None else None) \
+            or self.plan(ctx)
         family = plan.family
         inner = plan if family == "fse_dp" else None
         return get_strategy(family).execute(params, x, moe, activation,
-                                            inner, axis=axis)
+                                            inner, axis=axis,
+                                            routing=routing,
+                                            schedule=schedule)

@@ -19,14 +19,20 @@ import time
 
 
 def build_spec(args):
+    import dataclasses
     from repro.core.strategy import ExecutionSpec
     if args.moe_spec:
         spec = ExecutionSpec.load(args.moe_spec)
         if args.strategy:
-            import dataclasses
             spec = dataclasses.replace(spec, strategy=args.strategy)
     else:
         spec = ExecutionSpec(strategy=args.strategy or "capacity")
+    # CLI overrides fold straight into the spec (ServeConfig's autotune
+    # alias is deprecated)
+    if getattr(args, "autotune", None):
+        spec = dataclasses.replace(spec, autotune=args.autotune)
+    if getattr(args, "schedule", None):
+        spec = dataclasses.replace(spec, schedule=args.schedule)
     return spec
 
 
@@ -53,6 +59,12 @@ def main():
                          "(core.autotune); 'measured' times kernel "
                          "candidates once and caches them under "
                          "artifacts/autotune/")
+    ap.add_argument("--schedule", choices=("static", "dynamic"),
+                    default=None,
+                    help="expert-trajectory scheduling (core.trajectory): "
+                         "'dynamic' re-plans each layer's trajectory from "
+                         "the EMA of observed gating counts (outputs are "
+                         "bit-identical; execution order changes)")
     ap.add_argument("--dry-run", action="store_true",
                     help="validate the spec (JSON round-trip + registry) "
                          "and exercise one tiny request, then exit")
@@ -80,8 +92,7 @@ def main():
 
     if args.dry_run:
         eng = Engine(params, cfg, ServeConfig(
-            max_batch=2, max_ctx=16, spec=spec, autotune=args.autotune,
-            seed=args.seed))
+            max_batch=2, max_ctx=16, spec=spec, seed=args.seed))
         eng.submit([1, 2, 3, 4], max_new=2)
         outs = eng.run(max_iterations=8)
         n = sum(len(t) for t in outs.values())
@@ -93,7 +104,7 @@ def main():
     eng = Engine(params, cfg, ServeConfig(
         max_batch=args.max_batch, max_ctx=args.prompt_len + args.max_new + 8,
         buffering_slack=args.slack, theta_min=args.theta_min,
-        spec=spec, autotune=args.autotune, seed=args.seed))
+        spec=spec, seed=args.seed))
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
@@ -108,6 +119,7 @@ def main():
     print(f"tokens={s['tokens_emitted']} iterations={s['iterations']} "
           f"deferrals={s['deferrals']} expert_loads={s['expert_loads']} "
           f"loads_saved={s['expert_loads_saved']} "
+          f"dynamic_schedules={s['dynamic_schedules']} "
           f"throughput={s['tokens_emitted']/dt:.1f} tok/s")
 
 

@@ -61,12 +61,22 @@ def _expert_act(params, xe, activation):
 # dense oracle — O(T·E) compute, exact
 # ---------------------------------------------------------------------------
 
-def moe_dense(params, x2d, routing, activation):
-    """x2d: (T,d); returns (T,d). Computes all experts, weighted combine."""
+def moe_dense(params, x2d, routing, activation, schedule=None):
+    """x2d: (T,d); returns (T,d). Computes all experts, weighted combine.
+
+    A dynamic ``schedule`` reindexes the per-expert batch axis into
+    trajectory order (outputs restored before the combine — values are
+    bit-identical; only per-expert execution order changes)."""
+    from repro.core import trajectory
     T, d = x2d.shape
     E = params["w_up"].shape[0]
+    order = trajectory.resolve_order(
+        schedule, lambda: gating.expert_token_counts(routing))
     xe = jnp.broadcast_to(x2d[None], (E, T, d))
-    ye = _expert_act(params, xe, activation)          # (E,T,d)
+    p = params if order is None else _reorder_experts(params, order)
+    ye = _expert_act(p, xe, activation)               # (E,T,d)
+    if order is not None:
+        ye = trajectory.restore_order(order, ye)
     return jnp.einsum("te,etd->td", routing.combine, ye)
 
 
@@ -103,18 +113,47 @@ def _expert_ffn(params, xe, activation):
                                        activation)
 
 
-def moe_capacity(params, x2d, routing, moe: MoEConfig, activation):
+def _reorder_experts(params, order):
+    """Expert-stacked weight views in trajectory order (router/shared
+    untouched — they are not expert-indexed)."""
+    out = dict(params)
+    for k in ("w_gate", "w_up", "w_down"):
+        if k in params:
+            out[k] = jnp.take(params[k], order, axis=0)
+    return out
+
+
+def moe_capacity(params, x2d, routing, moe: MoEConfig, activation,
+                 schedule=None):
+    """Capacity dispatch -> grouped expert FFN -> combine.
+
+    The route stage happened upstream (``routing``); a dynamic
+    ``schedule`` (``repro.core.trajectory``) reindexes the dispatched
+    rows and weight stacks into trajectory order for the expert FFN and
+    restores canonical order before the combine, so outputs are
+    bit-identical to the static path."""
+    from repro.core import trajectory
     T, d = x2d.shape
     E = moe.num_experts
     C = capacity_of(T, moe)
+    order = trajectory.resolve_order(
+        schedule, lambda: gating.expert_token_counts(routing))
+    p = params if order is None else _reorder_experts(params, order)
     if sorted_dispatch_enabled():
         idx, wts = dispatch_tables(routing, T, E, C)
-        xe = gather_dispatch(x2d, idx)                                     # (E,C,d)
-        ye = _expert_ffn(params, xe, activation)
+        g_idx = idx if order is None else jnp.take(idx, order, axis=0)
+        xe = gather_dispatch(x2d, g_idx)                                   # (E,C,d)
+        ye = _expert_ffn(p, xe, activation)
+        if order is not None:
+            ye = trajectory.restore_order(order, ye)
         return scatter_combine(ye, idx, wts, T)
     dispatch, combine = dispatch_masks(routing, T, E, C)
     xe = jnp.einsum("tec,td->ecd", dispatch.astype(x2d.dtype), x2d)        # (E,C,d)
-    ye = _expert_ffn(params, xe, activation)                               # (E,C,d) fp32
+    if order is not None:
+        (xe,) = trajectory.apply_order(order, xe)
+    ye = _expert_ffn(p, xe, activation)                                    # (E,C,d) fp32
+    if order is not None:
+        ye = trajectory.restore_order(order, ye)
     return jnp.einsum("tec,ecd->td", combine.astype(jnp.float32),
                       ye).astype(x2d.dtype)
 
@@ -189,7 +228,8 @@ def scatter_combine(ye, idx, wts, T):
 # ---------------------------------------------------------------------------
 
 def moe_block(params, x, moe: MoEConfig, activation, *, impl=None, spec=None,
-              phase=None, layer=None, mesh_axis="model", return_aux=False):
+              phase=None, layer=None, mesh_axis="model", return_aux=False,
+              routing=None, schedule=None):
     """x: (B,S,d) or (T,d); thin lookup into the execution-strategy
     registry (``repro.core.strategy``).
 
@@ -200,17 +240,29 @@ def moe_block(params, x, moe: MoEConfig, activation, *, impl=None, spec=None,
     spec's per-phase / per-layer overrides.  Distributed strategies
     (fse_dp / ep / tp) route *inside* shard_map on local tokens and
     return a pmean'd aux loss; single-device strategies route globally.
+
+    Pipeline inputs: ``routing`` pre-computes the route stage (e.g. the
+    serving engine's gate pass — single-device strategies only);
+    ``schedule`` pre-computes the schedule stage (a host-built
+    ``trajectory.Schedule``).  With neither, the spec's ``schedule``
+    knob still applies: ``"dynamic"`` makes every strategy derive its
+    expert trajectory in-graph from its own routing counts.
     """
     from repro.core import strategy as strat
+    from repro.core import trajectory
     sp = strat.ExecutionSpec.coerce(spec if spec is not None else impl,
                                     default=moe.impl)
     name = sp.resolve(phase=phase, layer=layer)
+    if schedule is None and sp.schedule == "dynamic":
+        schedule = trajectory.DYNAMIC
     shape = x.shape
     if x.ndim == 2:
         x = x[None]
     with sp.scope():
         y, aux = strat.get_strategy(name).execute(params, x, moe, activation,
-                                                  axis=mesh_axis)
+                                                  axis=mesh_axis,
+                                                  routing=routing,
+                                                  schedule=schedule)
     if moe.num_shared_experts:
         y = y + ffn(params["shared"], x, activation)
     y = y.reshape(shape)

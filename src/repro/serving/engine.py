@@ -10,15 +10,27 @@ resumes from the same MoE boundary in a later iteration — outputs are
 bit-identical to an undeferred run (asserted by tests); only latency
 changes.
 
+Each MoE layer is **routed exactly once per iteration** (the pipeline's
+route stage, ``repro.core.gating``): the same :class:`Routing` drives
+the deferral decision, the paired-load trace, *and* the expert
+execution (threaded into ``moe_block(routing=...)``), so the gate never
+runs twice.  Per-layer :class:`~repro.core.trajectory.LoadTracker`
+EMAs feed the observed expert counts back into the scheduler; with
+``ExecutionSpec.schedule == "dynamic"`` each layer executes along the
+EMA-built paired-load trajectory (re-planned every iteration as gating
+drifts — outputs stay bit-identical, only expert execution order
+changes).
+
 Admission uses full-prompt prefill (batch=1) merged into the batched
 cache slots; the per-iteration expert token counts feed the paired-load
 policy and the deferral decisions, and are exported for the chiplet
 simulator to replay (the JAX engine and the cycle-level sim share one
-workload trace format).
+workload trace format — see README "Dynamic trajectory scheduling").
 """
 from __future__ import annotations
 
 import itertools
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -27,12 +39,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import gating
+from repro.core import gating, trajectory
 from repro.core.policies import TokenBufferPolicy, paired_load_order
 from repro.models import api, moe as moe_mod, transformer
 from repro.models.layers import apply_norm
 from repro.models import attention as attn_mod, mamba2 as ssm_mod
 from repro.models.mlp import ffn
+
+_ALIAS_WARNED: set = set()
+
+
+def _warn_alias(old: str, new: str) -> None:
+    """One-shot DeprecationWarning per legacy ServeConfig alias."""
+    if old in _ALIAS_WARNED:
+        return
+    _ALIAS_WARNED.add(old)
+    warnings.warn(f"ServeConfig.{old} is deprecated; use {new} "
+                  f"(see README migration table)", DeprecationWarning,
+                  stacklevel=4)
 
 
 @dataclass
@@ -48,12 +72,18 @@ class ServeConfig:
     spec: Optional[object] = None
     moe_impl: Optional[str] = None      # deprecated: use spec
     autotune: Optional[str] = None      # deprecated: use spec.autotune
+    ema_decay: float = 0.8              # LoadTracker decay (dynamic sched)
     temperature: float = 0.0            # 0 = greedy
     seed: int = 0
 
     def __post_init__(self):
         from dataclasses import replace
         from repro.core.strategy import ExecutionSpec
+        if self.moe_impl is not None:
+            _warn_alias("moe_impl",
+                        'ServeConfig.spec=ExecutionSpec(strategy=...)')
+        if self.autotune is not None:
+            _warn_alias("autotune", "ExecutionSpec.autotune")
         base = self.spec if self.spec is not None else (self.moe_impl
                                                         or "capacity")
         sp = ExecutionSpec.coerce(base, default="capacity")
@@ -97,8 +127,16 @@ class Engine:
         self._rng = np.random.default_rng(scfg.seed)
         self.iterations = 0
         self.stats = {"deferrals": 0, "expert_loads": 0, "expert_loads_saved": 0,
-                      "iterations": 0, "tokens_emitted": 0}
+                      "iterations": 0, "tokens_emitted": 0,
+                      "dynamic_schedules": 0}
         self.trace: List[dict] = []     # per (iter, layer) expert counts
+        # per-MoE-layer EMA of observed expert counts — the load vector
+        # fed back into the dynamic trajectory scheduler each iteration
+        self.load_trackers: Dict[int, trajectory.LoadTracker] = {}
+        # latest EMA-built Schedule per layer (written by _defer_cold,
+        # executed by _apply_moe in the same iteration)
+        self._layer_schedules: Dict[int, trajectory.Schedule] = {}
+        self.dynamic_schedule = scfg.spec.schedule == "dynamic"
 
     # ------------------------------------------------------------------
     # slot/param helpers
@@ -186,11 +224,17 @@ class Engine:
             if not run_ffn:
                 continue
             if ffn_kind == "moe":
-                run_ffn = self._defer_cold(slot_params, x, layer, run_ffn)
+                # route ONCE: the same Routing drives deferral, the
+                # trace, the EMA feedback, and the expert execution
+                h, routing = self._route_moe(slot_params, x)
+                run_ffn = self._defer_cold(routing, layer, run_ffn)
                 if not run_ffn:
                     continue
-            x = self._apply_ffn(slot_params, x, ffn_kind,
-                                [r.slot for r in run_ffn], layer)
+                x = self._apply_moe(slot_params, x, h, routing,
+                                    [r.slot for r in run_ffn], layer)
+            else:
+                x = self._apply_ffn(slot_params, x, ffn_kind,
+                                    [r.slot for r in run_ffn])
             for r in run_ffn:
                 r.progress = 2 * (layer + 1)
         self._x = x
@@ -259,24 +303,42 @@ class Engine:
             for i, c in enumerate(self.caches))
         return jnp.where(mask[:, None, None], x + h, x)
 
-    def _gate_preview(self, slot_params, x, slots):
-        """Router probs for the (normed) held activations of given slots."""
+    def _route_moe(self, slot_params, x):
+        """Pipeline *route* stage — once per (iteration, MoE layer):
+        normed activations + Routing for every slot row."""
         cfg = self.cfg
         h = apply_norm(cfg.norm, slot_params["norm2"], x)
         routing = gating.route(slot_params["moe"]["router"], h[:, 0, :],
                                top_k=cfg.moe.top_k)
-        idx = np.asarray(routing.indices)          # (B, k)
-        counts = np.zeros((cfg.moe.num_experts,), np.int64)
-        for s in slots:
-            counts[idx[s]] += 1
-        return idx, counts
+        return h, routing
 
-    def _defer_cold(self, slot_params, x, layer, run_ffn):
-        """Algorithm 2 at the MoE boundary; returns the non-deferred set."""
-        idx, counts = self._gate_preview(slot_params, x, [r.slot for r in run_ffn])
-        self.trace.append({"iter": self.iterations, "layer": layer,
-                           "counts": counts.copy(),
-                           "order": paired_load_order(counts)})
+    def _slot_counts(self, routing, slots):
+        """Expert counts restricted to the given slots
+        (``gating.expert_token_counts`` with a row mask)."""
+        return np.asarray(gating.expert_token_counts(
+            routing, self._mask(slots)), np.int64)
+
+    def _defer_cold(self, routing, layer, run_ffn):
+        """Algorithm 2 at the MoE boundary; returns the non-deferred set.
+
+        Also the *schedule* stage's observation point: the counts feed
+        the layer's LoadTracker EMA and the exported workload trace."""
+        idx = np.asarray(routing.indices)          # (B, k)
+        counts = self._slot_counts(routing, [r.slot for r in run_ffn])
+        tracker = self.load_trackers.setdefault(
+            layer, trajectory.LoadTracker(self.cfg.moe.num_experts,
+                                          decay=self.scfg.ema_decay))
+        tracker.update(counts)
+        rec = {"iter": self.iterations, "layer": layer,
+               "counts": counts.copy(),
+               "order": paired_load_order(counts),
+               "schedule": "dynamic" if self.dynamic_schedule else "static"}
+        if self.dynamic_schedule:
+            # build the EMA schedule once; _apply_moe executes along it
+            sched = tracker.schedule()
+            self._layer_schedules[layer] = sched
+            rec["trajectory"] = list(sched.order)
+        self.trace.append(rec)
         self.stats["expert_loads"] += int((counts > 0).sum())
         if self.policy.n_threshold >= (1 << 29):
             return run_ffn
@@ -289,23 +351,38 @@ class Engine:
             else:
                 kept.append(r)
         if len(kept) != len(run_ffn):
-            _, counts2 = self._gate_preview(slot_params, x, [r.slot for r in kept])
+            counts2 = self._slot_counts(routing, [r.slot for r in kept])
             self.stats["expert_loads_saved"] += int((counts > 0).sum()
                                                     - (counts2 > 0).sum())
         return kept
 
-    def _apply_ffn(self, slot_params, x, ffn_kind, slots, layer=None):
+    def _apply_moe(self, slot_params, x, h, routing, slots, layer):
+        """Dispatch + combine stages: execute the experts on the already
+        routed activations, along the EMA-built trajectory when the
+        spec's schedule is dynamic."""
+        from repro.parallel import meshctx
+        cfg = self.cfg
+        mask = self._mask(slots)
+        schedule = None
+        if self.dynamic_schedule:
+            schedule = self._layer_schedules[layer]   # built in _defer_cold
+            self.stats["dynamic_schedules"] += 1
+        # a precomputed Routing only matches the single-process layout;
+        # distributed strategies re-route their local rows in shard_map
+        routing_arg = routing if meshctx.get_mesh() is None else None
+        h = moe_mod.moe_block(slot_params["moe"], h, cfg.moe,
+                              cfg.activation, spec=self.scfg.spec,
+                              phase="decode", layer=layer,
+                              routing=routing_arg, schedule=schedule)
+        return jnp.where(mask[:, None, None], x + h, x)
+
+    def _apply_ffn(self, slot_params, x, ffn_kind, slots):
         cfg = self.cfg
         mask = self._mask(slots)
         if ffn_kind == "none":
             return x
         h = apply_norm(cfg.norm, slot_params["norm2"], x)
-        if ffn_kind == "moe":
-            h = moe_mod.moe_block(slot_params["moe"], h, cfg.moe,
-                                  cfg.activation, spec=self.scfg.spec,
-                                  phase="decode", layer=layer)
-        else:
-            h = ffn(slot_params["ffn"], h, cfg.activation)
+        h = ffn(slot_params["ffn"], h, cfg.activation)
         return jnp.where(mask[:, None, None], x + h, x)
 
     # ------------------------------------------------------------------

@@ -72,14 +72,31 @@ def _allgather_time(hw: HardwareConfig, nbytes_per_chip: float) -> float:
     return (P - 1) * step
 
 
+def _load_rows(E: int, C: int, assignments: float, loads) -> tuple:
+    """(effective expert rows, active expert count) — the discrete twin
+    of ``core.autotune.load_rows``.  ``loads`` is a normalized
+    per-expert share vector; ``None`` keeps the padded E*C model."""
+    if loads is None:
+        return float(E * C), E
+    l = np.asarray(loads, np.float64)
+    r = np.minimum(float(C), assignments * l)
+    return float(r.sum()), max(1, int((r >= 0.5).sum()))
+
+
 def simulate_mode(hw: HardwareConfig, spec: ModelSpec, mode: str,
                   tokens: int, *, micro_slices: int = 1,
                   capacity_factor: float = 1.25,
-                  act_bytes: Optional[int] = None) -> ModeResult:
+                  act_bytes: Optional[int] = None,
+                  loads=None) -> ModeResult:
     """Latency of one MoE layer executed in one FSE-DP SPMD mode.
 
     ``tokens`` is the global token count of the iteration (B*S); tokens
     split uniformly over chiplets, matching the seq-sharded layout.
+    ``loads`` (a normalized per-expert load vector) switches the expert
+    terms from the padded-capacity model to the observed-gating model:
+    rows scale with the actual per-expert assignments and idle experts
+    skip their DDR weight stream — the discrete referee of the
+    load-aware cost model (``core.autotune.mode_cost(load=...)``).
     """
     P = hw.num_chiplets
     E, d, de = spec.num_experts, spec.d_model, spec.d_expert
@@ -98,13 +115,14 @@ def simulate_mode(hw: HardwareConfig, spec: ModelSpec, mode: str,
     else:
         T_loc = tokens
         C = _capacity(max(1, tokens), spec, capacity_factor)
+    rows, active = _load_rows(E, C, T_loc * spec.top_k, loads)
 
     # dispatch/combine one-hots + router, charged as compute on every chip
     dispatch_flops = 2.0 * T_loc * E * C * d * 2 + 2.0 * T_loc * d * E
-    ddr_shard = n_mats * E * d * de_loc * wb          # local weight shard
+    ddr_shard = n_mats * active * d * de_loc * wb     # local weight shard
 
     if mode == "slice":
-        flops = 2.0 * n_mats * E * C * d * de_loc + dispatch_flops
+        flops = 2.0 * n_mats * rows * d * de_loc + dispatch_flops
         t_comp = flops / hw.tops
         t_ddr = ddr_shard / (hw.ddr_total / P)
         t_gather = _allgather_time(hw, tokens * d * ab)
@@ -116,8 +134,8 @@ def simulate_mode(hw: HardwareConfig, spec: ModelSpec, mode: str,
     # ---- stream/index: discrete ring of P steps x M micro-slices ---------
     M = max(1, min(micro_slices, int(de_loc) or 1))
     slice_de = de_loc / M
-    slice_bytes = n_mats * E * d * slice_de * wb
-    comp_step = (2.0 * n_mats * E * C * d * slice_de
+    slice_bytes = n_mats * active * d * slice_de * wb
+    comp_step = (2.0 * n_mats * rows * d * slice_de
                  + dispatch_flops / (P * M)) / hw.tops
 
     # DDR streams the local shard micro-slice by micro-slice; slice m of
@@ -190,6 +208,70 @@ def simulate_ep(hw: HardwareConfig, spec: ModelSpec, tokens: int, *,
     t_ddr = ddr / (hw.ddr_total / P)
     lat = t_a2a + max(t_comp, t_ddr) + t_a2a
     return ModeResult("ep", lat, t_comp, 0.0, 2 * t_a2a, ddr * P)
+
+
+def simulate_trajectory(hw: HardwareConfig, spec: ModelSpec, counts, *,
+                        order=None, padded: bool = False,
+                        capacity_factor: float = 1.25) -> float:
+    """Step time of one MoE layer executed as a double-buffered expert
+    *flow*: DDR streams expert weights in trajectory order while the
+    array computes the previously-loaded expert (paper Fig. 4/5).
+
+    ``counts`` are per-expert token-activation counts; ``order`` the
+    trajectory (expert visit order — ``None`` = canonical index order);
+    ``padded`` models the shape-only static plan, which knows nothing of
+    the gating: every expert is loaded and computed at its full
+    capacity-padded row count.  A dynamic (count-built) trajectory skips
+    idle experts and computes the observed rows — and its hot/cold
+    pairing keeps the DDR stream hidden behind compute instead of
+    piling memory-bound experts into a compute-idle tail.
+
+    Serial-resource model: one DDR load chain (total array bandwidth)
+    feeding one compute chain (total array throughput), double-buffered
+    — ``load_done(i+1)`` may run during ``compute(i)``.  Deliberately
+    not the closed-form cost model, so dynamic-vs-static comparisons
+    against ``core.autotune``'s load-aware predictions are meaningful.
+    """
+    counts = np.asarray(counts, np.float64)
+    E = spec.num_experts
+    tokens = counts.sum() / max(1, spec.top_k)
+    C = _capacity(max(1, int(math.ceil(tokens))), spec, capacity_factor)
+    if order is None:
+        order = range(E)
+    tops = hw.tops * hw.num_chiplets
+    ddr = hw.ddr_total
+    t_load = spec.expert_bytes / ddr
+    load_done = 0.0
+    comp_done = 0.0
+    for e in order:
+        rows = C if padded else min(C, counts[int(e)])
+        if not padded and rows <= 0:
+            continue                       # dynamic trajectory skips idle
+        load_done = load_done + t_load     # serial DDR stream
+        flops = 2.0 * spec.n_mats * rows * spec.d_model * spec.d_expert
+        comp_done = max(comp_done, load_done) + flops / tops
+    return comp_done
+
+
+def schedule_step_times(hw: HardwareConfig, spec: ModelSpec, counts, *,
+                        capacity_factor: float = 1.25) -> Dict[str, float]:
+    """Static-vs-dynamic trajectory step times for one observed gating.
+
+    ``static`` is the shape-only plan (canonical order, capacity-padded,
+    loads every expert); ``dynamic`` the count-built paired-load
+    trajectory (``core.policies.paired_load_order``); ``dynamic_unpaired``
+    isolates the pairing gain (same skipping/rows, canonical order).
+    """
+    from repro.core.policies import paired_load_order
+    return {
+        "static": simulate_trajectory(hw, spec, counts, padded=True,
+                                      capacity_factor=capacity_factor),
+        "dynamic": simulate_trajectory(hw, spec, counts,
+                                       order=paired_load_order(counts),
+                                       capacity_factor=capacity_factor),
+        "dynamic_unpaired": simulate_trajectory(
+            hw, spec, counts, capacity_factor=capacity_factor),
+    }
 
 
 def rank_families(hw: HardwareConfig, spec: ModelSpec, tokens: int, *,

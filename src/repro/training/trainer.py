@@ -41,9 +41,20 @@ class TrainConfig:
     state_dtype: str = "float32"
 
 
+_MOE_IMPL_WARNED = False
+
+
 def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
     sched = adamw.cosine_schedule(tcfg.lr, tcfg.warmup, tcfg.total_steps)
 
+    if tcfg.moe_impl is not None:
+        global _MOE_IMPL_WARNED
+        if not _MOE_IMPL_WARNED:
+            _MOE_IMPL_WARNED = True
+            import warnings
+            warnings.warn("TrainConfig.moe_impl is deprecated; use "
+                          "TrainConfig.moe_spec (see README migration "
+                          "table)", DeprecationWarning, stacklevel=2)
     spec = tcfg.moe_spec if tcfg.moe_spec is not None else tcfg.moe_impl
 
     def step_fn(params, opt_state, batch, residual):

@@ -43,6 +43,16 @@ def test_per_layer_spec_overrides_match_forced():
 
 
 @pytest.mark.slow
+def test_dynamic_schedule_bit_identical_to_static():
+    """schedule=dynamic (in-graph traced trajectory AND host-built EMA
+    schedule) == static, bit for bit, for every distributed family and
+    forced FSE-DP mode on 8 fake devices — scheduling changes expert
+    execution order only (the paper's virtualization argument)."""
+    out = run_distributed_script("dynamic_schedule.py")
+    assert "DYNAMIC SCHEDULE PARITY OK" in out
+
+
+@pytest.mark.slow
 def test_small_mesh_dryrun_machinery():
     out = run_distributed_script("dryrun_small.py", timeout=1800)
     assert out.count(" ok ") >= 15      # 5 archs × 3 kinds

@@ -36,6 +36,52 @@ def test_expert_pairs():
     assert pairs[1] == (2, 3)
 
 
+# ---------------------------------------------------------------------------
+# paired-load edge cases (the schedule stage depends on these exactly)
+# ---------------------------------------------------------------------------
+
+
+def test_paired_order_all_zero_counts():
+    """No active experts: the order is still a permutation (all idle),
+    and there is nothing to pair."""
+    counts = [0, 0, 0, 0]
+    order = paired_load_order(counts)
+    assert sorted(order) == [0, 1, 2, 3]
+    assert expert_pairs(counts) == []
+
+
+def test_paired_order_single_expert():
+    assert paired_load_order([7]) == [0]
+    assert expert_pairs([7]) == [(0, None)]
+    assert paired_load_order([0]) == [0]
+    assert expert_pairs([0]) == []
+
+
+def test_paired_order_odd_active_count():
+    """Odd number of active experts: the middle expert stands alone and
+    pairs with None."""
+    counts = [9, 4, 1]
+    assert paired_load_order(counts) == [0, 2, 1]
+    pairs = expert_pairs(counts)
+    assert pairs == [(0, 2), (1, None)]
+
+
+def test_paired_order_tied_loads_deterministic():
+    """Ties resolve by stable index order — the trajectory must be
+    deterministic so static/dynamic comparisons are reproducible."""
+    counts = [5, 5, 5, 5]
+    assert paired_load_order(counts) == [0, 3, 1, 2]
+    assert paired_load_order(counts) == paired_load_order(list(counts))
+    assert expert_pairs(counts) == [(0, 3), (1, 2)]
+
+
+def test_paired_order_numpy_and_list_inputs_agree():
+    counts = [3, 0, 8, 0, 1]
+    assert paired_load_order(np.asarray(counts)) == paired_load_order(counts)
+    # idle experts trail the active ones
+    assert paired_load_order(counts)[-2:] in ([1, 3], [3, 1])
+
+
 class TestAlgorithm2:
     def test_timer_grants_after_threshold(self):
         p = TokenBufferPolicy(theta_min=4, n_threshold=3)

@@ -83,3 +83,102 @@ def test_mixed_length_prompts(setup):
     r2 = eng.submit(list(range(1, 20)), max_new=4)
     outs = eng.run()
     assert len(outs[r1]) == 4 and len(outs[r2]) == 4
+
+
+# ---------------------------------------------------------------------------
+# route-once pipeline + dynamic trajectory scheduling
+# ---------------------------------------------------------------------------
+
+
+def test_engine_routes_each_moe_layer_once(setup, monkeypatch):
+    """The engine's gate pass IS the route stage: one gating.route call
+    per MoE layer per iteration, threaded into both deferral and expert
+    execution (no re-route inside moe_block)."""
+    from repro.core import gating
+    cfg, params = setup
+    eng = Engine(params, cfg, ServeConfig(max_batch=2, max_ctx=32))
+    eng.submit([1, 2, 3], max_new=4)
+
+    calls = []
+    real_route = gating.route
+
+    def counting_route(*a, **kw):
+        calls.append(1)
+        return real_route(*a, **kw)
+
+    monkeypatch.setattr(gating, "route", counting_route)
+    eng.step()
+    n_moe = sum(1 for _, f in (eng._layer_kind(l) for l in range(eng.L))
+                if f == "moe")
+    assert n_moe > 0
+    assert len(calls) == n_moe, (len(calls), n_moe)
+
+
+def test_dynamic_schedule_output_invariant(setup):
+    """schedule=dynamic re-orders expert execution along the EMA
+    trajectory but never changes emitted tokens (the virtualization
+    argument, engine-level)."""
+    from repro.core.strategy import ExecutionSpec
+    cfg, params = setup
+
+    def run(spec):
+        eng = Engine(params, cfg, ServeConfig(max_batch=4, max_ctx=48,
+                                              spec=spec))
+        rids = [eng.submit(list(p), max_new=6) for p in ((1, 2, 3, 4),
+                                                         (9, 8, 7))]
+        outs = eng.run()
+        return eng, [outs[r] for r in rids]
+
+    e_s, o_s = run(ExecutionSpec(strategy="capacity"))
+    e_d, o_d = run(ExecutionSpec(strategy="capacity", schedule="dynamic"))
+    assert o_s == o_d
+    assert e_d.stats["dynamic_schedules"] > 0
+    assert e_s.stats["dynamic_schedules"] == 0
+    # trace carries the executed trajectory under dynamic scheduling
+    rec = e_d.trace[-1]
+    assert rec["schedule"] == "dynamic"
+    assert sorted(rec["trajectory"]) == list(range(cfg.moe.num_experts))
+    assert e_s.trace[-1]["schedule"] == "static"
+    # EMA trackers observed every MoE layer
+    assert e_d.load_trackers and all(
+        t.steps > 0 for t in e_d.load_trackers.values())
+
+
+def test_trace_counts_use_gating_helper(setup):
+    """Engine counts == gating.expert_token_counts over the active
+    slots (the hand-rolled numpy loop is gone)."""
+    import jax.numpy as jnp
+    from repro.core import gating
+    cfg, params = setup
+    eng, _ = _run(cfg, params)
+    rec = eng.trace[0]
+    assert rec["counts"].dtype == np.int64
+    assert rec["counts"].sum() > 0
+    # a masked row contributes nothing
+    x2d = jax.random.normal(jax.random.PRNGKey(0), (4, cfg.d_model))
+    routing = gating.route(
+        jax.tree.map(lambda a: a[0], params["periods"][0])["moe"]["router"],
+        x2d, top_k=cfg.moe.top_k)
+    m = jnp.asarray([True, False, False, False])
+    assert int(gating.expert_token_counts(routing, m).sum()) == cfg.moe.top_k
+
+
+def test_serveconfig_deprecated_aliases_warn_once():
+    """Satellite: moe_impl / autotune aliases emit a one-shot
+    DeprecationWarning and still merge into the spec."""
+    import warnings as _w
+    from repro.serving import engine as engine_mod
+    engine_mod._ALIAS_WARNED.clear()
+    with pytest.warns(DeprecationWarning, match="moe_impl"):
+        sc = ServeConfig(moe_impl="dense")
+    assert sc.spec.strategy == "dense"
+    with pytest.warns(DeprecationWarning, match="autotune"):
+        sc = ServeConfig(autotune="off")
+    assert sc.spec.autotune == "off"
+    with _w.catch_warnings():
+        _w.simplefilter("error")               # second use is silent
+        ServeConfig(moe_impl="dense", autotune="off")
+    # spec-based configuration never warns
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        ServeConfig(spec="capacity")
