@@ -177,6 +177,46 @@ def check_skewed_schedules(base, cur, tol, failures):
           f", {matched} rows matched vs baseline")
 
 
+def check_serving(base, cur, tol, failures):
+    """Serving closed-loop gate.  The benchmark runs on the scheduler's
+    iteration clock, so every gated metric is deterministic for a given
+    (workload, seed): completion must be total, token/iteration counts
+    exact, and the TTFT/TPOT/queue-delay percentiles may not drift
+    slower than the committed baseline beyond --tolerance."""
+    if cur.get("workload") != base.get("workload"):
+        failures.append(f"BENCH_serving: workload changed "
+                        f"{base.get('workload')} -> {cur.get('workload')} — "
+                        f"refresh benchmarks/baselines/ if intentional")
+        return
+    want = base["workload"]["requests"]
+    if cur.get("completed") != want or cur.get("dropped"):
+        failures.append(f"BENCH_serving: {cur.get('completed')}/{want} "
+                        f"completed, {cur.get('dropped')} dropped — the "
+                        f"closed loop no longer serves every request")
+    for col in ("tokens_emitted", "prefill_tokens"):
+        if cur.get(col) != base.get(col):
+            failures.append(f"BENCH_serving.{col}: {base.get(col)} -> "
+                            f"{cur.get(col)} (deterministic count changed)")
+    for col in ("iterations", "prefill_chunks"):
+        bv, cv = base.get(col, 0), cur.get(col, 0)
+        if bv and cv > bv * (1 + tol):
+            failures.append(f"BENCH_serving.{col}: {bv} -> {cv} "
+                            f"(+{cv / bv - 1:.0%} > {tol:.0%})")
+    for metric in ("ttft_iters", "tpot_iters", "queue_delay_iters"):
+        for q, bv in (base.get(metric) or {}).items():
+            cv = (cur.get(metric) or {}).get(q)
+            if cv is None or bv != bv or cv != cv:   # NaN-tolerant
+                continue
+            if cv > bv * (1 + tol) + 1e-9:
+                failures.append(
+                    f"BENCH_serving.{metric}.{q}: {bv:.3f} -> {cv:.3f} "
+                    f"iters (+{cv / max(bv, 1e-9) - 1:.0%} > {tol:.0%})")
+    print(f"BENCH_serving: {cur.get('completed')} completed in "
+          f"{cur.get('iterations')} iterations, ttft p50="
+          f"{(cur.get('ttft_iters') or {}).get('p50')} "
+          f"(baseline {(base.get('ttft_iters') or {}).get('p50')})")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline-dir",
@@ -197,6 +237,9 @@ def main(argv=None):
                           b, c, args.tolerance, f)),
                      ("BENCH_moe_strategies.json",
                       lambda b, c, f: check_moe_strategies(
+                          b, c, args.tolerance, f)),
+                     ("BENCH_serving.json",
+                      lambda b, c, f: check_serving(
                           b, c, args.tolerance, f))):
         bpath = os.path.join(args.baseline_dir, name)
         cpath = os.path.join(args.current_dir, name)

@@ -1,0 +1,81 @@
+"""Serving-latency benchmark: closed-loop Poisson traffic through the
+continuous-batching scheduler (chunked prefill + Algorithm-2 engine).
+
+Emits ``artifacts/bench/BENCH_serving.json`` with two metric classes:
+
+* **deterministic** (gated by ``check_regression.py`` against the
+  committed baseline): iteration-clocked TTFT / TPOT / queue-delay
+  percentiles, completed/emitted counts, engine iterations and prefill
+  chunks.  The scheduler runs on the iteration clock (each step
+  advances the metric clock by 1), so these are bit-reproducible across
+  machines — a drift means the scheduler or engine genuinely changed.
+* **informational** wall-clock timings (tok/s) — recorded, not gated.
+
+Usage:  PYTHONPATH=src python benchmarks/serving_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from common import ART
+
+
+def run(quick: bool = False) -> dict:
+    import jax
+    from repro.configs import reduced_config
+    from repro.models import api
+    from repro.serving import (Engine, ServeConfig, Scheduler,
+                               SchedulerConfig, TrafficConfig, make_traffic,
+                               run_closed_loop)
+
+    cfg = reduced_config("granite-moe-1b-a400m").replace(dtype="float32")
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    n_req = 8 if quick else 16
+    tcfg = TrafficConfig(num_requests=n_req, rate=0.8, avg_prompt=10,
+                         max_prompt=24, min_new=2, max_new=5,
+                         vocab=cfg.vocab_size, seed=0)
+    traffic = make_traffic(tcfg)
+    eng = Engine(params, cfg, ServeConfig(max_batch=4, max_ctx=32,
+                                          chunk_tokens=4, spec="capacity"))
+    sched = Scheduler(eng, SchedulerConfig(queue_capacity=64, policy="fcfs"))
+    t0 = time.time()
+    res = run_closed_loop(sched, traffic)
+    wall_s = time.time() - t0
+    m = res["metrics"]
+    out = {
+        "workload": {"requests": n_req, "rate": tcfg.rate,
+                     "avg_prompt": tcfg.avg_prompt, "chunk_tokens": 4,
+                     "max_batch": 4, "seed": tcfg.seed},
+        # deterministic, iteration-clocked — gated against the baseline
+        "ttft_iters": m.ttft, "tpot_iters": m.tpot,
+        "queue_delay_iters": m.queue_delay,
+        "completed": m.completed, "dropped": len(res["dropped"]),
+        "tokens_emitted": m.tokens_emitted, "iterations": m.iterations,
+        "prefill_chunks": eng.stats["prefill_chunks"],
+        "prefill_tokens": eng.stats["prefill_tokens"],
+        # informational wall-clock (machine-dependent, not gated)
+        "wall_s": wall_s,
+        "throughput_tok_s": m.tokens_emitted / max(wall_s, 1e-9),
+    }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller request count (CI)")
+    args = ap.parse_args()
+    out = run(quick=args.quick)
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, "BENCH_serving.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print(json.dumps(out, indent=2, sort_keys=True))
+    print(f"-> {os.path.relpath(path)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,19 @@
   PYTHONPATH=src python -m repro.launch.serve --arch granite-moe-1b-a400m \
       --reduced --requests 6 --max-new 16 --slack 0.2
 
+Closed-loop traffic mode (``--traffic``) drives the continuous-batching
+scheduler with Poisson arrivals instead of a hand-fed batch: requests
+stream through a bounded admission queue (``--queue-capacity``,
+``--queue-policy``), prompts prefill in ``--chunk-tokens``-token chunks
+piggybacked on the decode batch, and the run reports TTFT / TPOT /
+queue-delay p50/p95/p99 plus throughput:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-moe-1b-a400m \
+      --reduced --traffic --traffic-requests 32 --traffic-rate 0.8 \
+      --chunk-tokens 8
+
+``--traffic --dry-run`` runs a tiny deterministic closed loop (CI smoke).
+
 MoE execution is configured by a single :class:`ExecutionSpec`
 (``repro.core.strategy``): ``--strategy`` names a registered strategy
 (fse_dp / ep / tp / capacity / dense / auto), ``--moe-spec path.json``
@@ -67,7 +80,21 @@ def main():
                          "bit-identical; execution order changes)")
     ap.add_argument("--dry-run", action="store_true",
                     help="validate the spec (JSON round-trip + registry) "
-                         "and exercise one tiny request, then exit")
+                         "and exercise one tiny request, then exit "
+                         "(with --traffic: a tiny closed loop)")
+    ap.add_argument("--traffic", action="store_true",
+                    help="closed-loop mode: Poisson arrivals through the "
+                         "continuous-batching scheduler (chunked prefill), "
+                         "reporting TTFT/TPOT/queue-delay percentiles")
+    ap.add_argument("--traffic-requests", type=int, default=32)
+    ap.add_argument("--traffic-rate", type=float, default=0.5,
+                    help="mean Poisson arrivals per second (wall clock)")
+    ap.add_argument("--avg-prompt", type=int, default=12)
+    ap.add_argument("--chunk-tokens", type=int, default=8,
+                    help="prefill chunk size piggybacked per iteration")
+    ap.add_argument("--queue-capacity", type=int, default=64)
+    ap.add_argument("--queue-policy", choices=("fcfs", "spf"),
+                    default="fcfs")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -89,6 +116,47 @@ def main():
     if args.reduced:
         cfg = cfg.replace(dtype="float32")
     params = api.init_params(jax.random.PRNGKey(args.seed), cfg)
+
+    if args.traffic:
+        from repro.serving import (Scheduler, SchedulerConfig, TrafficConfig,
+                                   make_traffic, run_closed_loop)
+        n_req = 4 if args.dry_run else args.traffic_requests
+        max_prompt = max(2, min(args.avg_prompt * 2,
+                                args.prompt_len + args.avg_prompt))
+        tcfg = TrafficConfig(num_requests=n_req, rate=args.traffic_rate,
+                             avg_prompt=args.avg_prompt,
+                             max_prompt=max_prompt, min_new=2,
+                             max_new=args.max_new, vocab=cfg.vocab_size,
+                             seed=args.seed)
+        traffic = make_traffic(tcfg)
+        need_ctx = max_prompt + args.max_new + 1
+        eng = Engine(params, cfg, ServeConfig(
+            max_batch=args.max_batch, max_ctx=need_ctx,
+            buffering_slack=args.slack, theta_min=args.theta_min,
+            chunk_tokens=args.chunk_tokens, spec=spec, seed=args.seed))
+        clock = None if args.dry_run else time.monotonic
+        sched = Scheduler(eng, SchedulerConfig(
+            queue_capacity=args.queue_capacity, policy=args.queue_policy),
+            clock=clock)
+        res = run_closed_loop(sched, traffic)
+        m = res["metrics"]
+        unit = "iters" if args.dry_run else "s"
+        if args.dry_run and m.completed < n_req:
+            raise SystemExit(f"traffic dry-run incomplete: "
+                             f"{m.completed}/{n_req}")
+        print(f"traffic: {m.completed} completed, {len(res['dropped'])} "
+              f"dropped, {m.rejected} rejected, {m.iterations} iterations")
+        for name, pct in (("ttft", m.ttft), ("tpot", m.tpot),
+                          ("queue_delay", m.queue_delay)):
+            print(f"  {name:12s} p50={pct['p50']:.3f} p95={pct['p95']:.3f} "
+                  f"p99={pct['p99']:.3f} {unit}")
+        print(f"  throughput   {m.throughput:.2f} tok/{unit} "
+              f"({m.tokens_emitted} tokens, "
+              f"{eng.stats['prefill_chunks']} prefill chunks, "
+              f"{eng.stats['deferrals']} deferrals)")
+        if args.dry_run:
+            print("traffic dry-run OK")
+        return
 
     if args.dry_run:
         eng = Engine(params, cfg, ServeConfig(

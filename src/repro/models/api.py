@@ -102,6 +102,24 @@ def prefill_fn(params, batch, cfg: ModelConfig, max_seq: int, *, spec=None):
                                spec=spec)
 
 
+def prefill_chunk_fn(params, tokens, caches, cache_len, cfg: ModelConfig, *,
+                     spec=None, token_mask=None, return_hidden=False):
+    """Append a K-token prompt chunk to existing decode caches.
+
+    The continuous-batching engine's admission path: prompts are
+    processed ``chunk_tokens`` at a time piggybacked on the decode
+    batch, so admission never blocks an iteration.  Returns
+    (logits (B,K,V) — or final hidden states with ``return_hidden``,
+    new_caches, per-layer expert counts) — see
+    ``transformer.prefill_chunk``.
+    """
+    if cfg.is_encoder_decoder:
+        raise NotImplementedError("chunked prefill serves LM-family models")
+    return transformer.prefill_chunk(params, tokens, caches, cache_len, cfg,
+                                     spec=spec, token_mask=token_mask,
+                                     return_hidden=return_hidden)
+
+
 def decode_fn(params, token, caches, cache_len, cfg: ModelConfig, *,
               spec=None, unshard=False):
     """One decode step -> (logits, new caches)."""

@@ -198,6 +198,51 @@ def attention_decode(params, x, cache: KVCache, cache_len, *,
     return out, KVCache(k, v)
 
 
+def attention_append(params, x, cache: KVCache, cache_len, *,
+                     n_heads, n_kv, head_dim, rope_theta, token_mask=None):
+    """Chunked-prefill step: append a K-token chunk to the KV cache.
+
+    x: (B,K,d); cache k/v: (B,S,n_kv,hd); cache_len: (B,) tokens already
+    cached per row.  ``token_mask`` (B,K) marks the valid chunk prefix
+    per row (rows may be mid-prompt at different depths, and the last
+    chunk of a prompt is usually partial): invalid positions neither
+    write the cache nor become visible to any valid query, so a row
+    whose mask is all-False passes through bit-untouched.
+
+    Each valid token lands at absolute position ``cache_len + i`` and
+    attends causally over everything at or before it — exactly the keys
+    the monolithic ``prefill`` path would give it.  Returns
+    (out (B,K,d), new cache).
+    """
+    B, K, _ = x.shape
+    S = cache.k.shape[1]
+    q = _split_heads(x @ params["wq"], n_heads, head_dim)      # (B,K,H,hd)
+    k_new = _split_heads(x @ params["wk"], n_kv, head_dim)
+    v_new = _split_heads(x @ params["wv"], n_kv, head_dim)
+    pos = cache_len[:, None] + jnp.arange(K)[None, :]           # (B,K)
+    if rope_theta:
+        q = apply_rope(q, pos, rope_theta)
+        k_new = apply_rope(k_new, pos, rope_theta)
+    if token_mask is None:
+        token_mask = jnp.ones((B, K), bool)
+    # masked positions are steered out of range and dropped by the scatter
+    idx = jnp.where(token_mask, pos, S)
+    rows = jnp.arange(B)[:, None]
+    k = cache.k.at[rows, idx].set(k_new.astype(cache.k.dtype), mode="drop")
+    v = cache.v.at[rows, idx].set(v_new.astype(cache.v.dtype), mode="drop")
+
+    kf = _repeat_kv(k, n_heads)                                 # (B,S,H,hd)
+    vf = _repeat_kv(v, n_heads)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kf).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(head_dim))
+    valid = (jnp.arange(S)[None, None, :]
+             <= jnp.minimum(pos, S - 1)[:, :, None])            # (B,K,S)
+    scores = jnp.where(valid[:, None], scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.reshape(B, K, n_heads * head_dim) @ params["wo"], KVCache(k, v)
+
+
 def prefill_kv(params, x, *, n_kv, head_dim, rope_theta, positions=None):
     """Compute the cache entries for a full prompt (used by prefill_step)."""
     B, S, _ = x.shape

@@ -234,6 +234,59 @@ def mamba2_prefill(params, x, ssm: SSMConfig, d_model):
     return y @ params["out_proj"], SSMState(conv_state, final)
 
 
+def mamba2_chunk(params, x, state: SSMState, ssm: SSMConfig, d_model,
+                 token_mask=None):
+    """Chunked-prefill step: advance the SSM by a K-token chunk.
+
+    x: (B,K,d); ``state`` carries the rolling conv window and the SSD
+    recurrent state from previous chunks (``init_ssm_state`` zeros for
+    the first chunk).  ``token_mask`` (B,K) marks the valid chunk
+    *prefix* per row: masked tail steps have their dt zeroed, so the
+    decay is exp(0)=1 and the input contribution is 0 — the recurrent
+    state passes through them untouched, and the conv window is rebuilt
+    from the last valid inputs, so an all-False row is a bit-exact
+    no-op.  Uses the exact sequential recurrence (``ssd_naive``), the
+    same oracle the one-token decode step follows.
+
+    Returns (y (B,K,d), new SSMState).
+    """
+    B_, L, _ = x.shape
+    di = ssm.expand * d_model
+    nh = di // ssm.head_dim
+    g, n = ssm.n_groups, ssm.d_state
+    zxbcdt = x @ params["in_proj"]
+    z, xBC_raw, dt = jnp.split(zxbcdt, [di, di + di + 2 * g * n], axis=-1)
+    Kc = params["conv_w"].shape[0]
+    # causal conv over [carried window | chunk] — same window sum as
+    # _causal_conv but seeded with the previous chunk's tail instead of
+    # zero padding (matches the decode step's rolling window)
+    cat = jnp.concatenate([state.conv.astype(xBC_raw.dtype), xBC_raw], axis=1)
+    xBC = sum(cat[:, i:i + L, :] * params["conv_w"][i] for i in range(Kc)) \
+        + params["conv_b"]
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    if token_mask is not None:
+        dt = dt * token_mask[..., None].astype(dt.dtype)
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(B_, L, nh, ssm.head_dim)
+    y, final = ssd_naive(xh, dt, A, Bm.reshape(B_, L, g, n),
+                         Cm.reshape(B_, L, g, n), initial_state=state.ssd)
+    y = y + params["D"][None, None, :, None] * xh
+    y = (y.reshape(B_, L, di) * jax.nn.silu(z)).astype(x.dtype)
+    # new conv window: the Kc-1 raw inputs ending at the last valid
+    # position (per row) — for v valid tokens that window starts at
+    # offset v into [carried | chunk]
+    if token_mask is None:
+        v = jnp.full((B_,), L, jnp.int32)
+    else:
+        v = token_mask.sum(1).astype(jnp.int32)
+    widx = v[:, None] + jnp.arange(Kc - 1)[None, :]             # (B,Kc-1)
+    conv_state = jnp.take_along_axis(cat, widx[..., None],
+                                     axis=1).astype(state.conv.dtype)
+    return y @ params["out_proj"], SSMState(conv_state, final)
+
+
 def mamba2_decode(params, x, state: SSMState, ssm: SSMConfig, d_model):
     """One-token decode. x: (B,1,d) -> (B,1,d), new state."""
     B_ = x.shape[0]

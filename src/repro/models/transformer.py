@@ -323,6 +323,104 @@ def prefill(params, tokens, cfg: ModelConfig, max_seq: int, *,
     return _unembed(params, x, cfg), caches
 
 
+def prefill_chunk(params, tokens, caches, cache_len, cfg: ModelConfig, *,
+                  spec=None, token_mask=None, return_hidden=False):
+    """Append a K-token prompt chunk to existing decode caches.
+
+    The chunked-prefill entry point for continuous-batching serving:
+    instead of one monolithic ``prefill`` per prompt, K tokens at a time
+    are appended to the per-slot caches, so long prompts never block an
+    engine iteration.
+
+    tokens: (B,K) int32; caches: stacked per-period SlotCache tuple from
+    ``init_caches``; cache_len: (B,) tokens already cached per row;
+    token_mask: (B,K) valid chunk prefix per row (all-False rows pass
+    through with their cache bit-untouched — decode-phase and idle slots
+    piggyback in the same batch).
+
+    Returns (logits (B,K,V), new_caches, counts); with
+    ``return_hidden=True`` the first element is the final-normed hidden
+    state (B,K,d) instead — the serving engine reads one position per
+    prompt-completing row, so it skips the full (B,K,V) unembed and
+    projects just the rows it samples.  ``counts`` is an
+    (n_periods, p, E) int32 array of per-layer expert-activation counts
+    over the valid tokens (zero rows for non-MoE slots; counts for layer
+    L live at ``counts[L // p, L % p]``) — the serving engine's workload
+    trace and the chiplet simulator share this feed.  Counts are only
+    collected single-process (distributed strategies route their local
+    rows inside shard_map).
+    """
+    p, plan = period_plan(cfg)
+    sp = _coerce_spec(spec)
+    x = _embed(params, tokens, cfg)
+    B, K = tokens.shape
+    if token_mask is None:
+        token_mask = jnp.ones((B, K), bool)
+    E = cfg.moe.num_experts if cfg.moe else 1
+
+    def period_body(x, period_in, layer_base=None):
+        from repro.core import gating
+        from repro.parallel import meshctx
+        period_params, period_caches = period_in
+        new_caches = []
+        counts = []
+        for s, (mixer, ffn_kind) in enumerate(plan):
+            h = apply_norm(cfg.norm, period_params[s]["norm1"], x)
+            if mixer == "attn":
+                h, kv = attn_mod.attention_append(
+                    period_params[s]["attn"], h, period_caches[s].kv,
+                    cache_len, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim,
+                    rope_theta=cfg.rope_theta, token_mask=token_mask)
+                new_caches.append(SlotCache(kv, period_caches[s].ssm))
+            else:
+                h, st = ssm_mod.mamba2_chunk(
+                    period_params[s]["ssm"], h, period_caches[s].ssm,
+                    cfg.ssm, cfg.d_model, token_mask=token_mask)
+                new_caches.append(SlotCache(period_caches[s].kv, st))
+            x = x + h
+            cnt = jnp.zeros((E,), jnp.int32)
+            if ffn_kind != "none":
+                h = apply_norm(cfg.norm, period_params[s]["norm2"], x)
+                if ffn_kind == "moe":
+                    layer = None if layer_base is None else layer_base + s
+                    routing = None
+                    if meshctx.get_mesh() is None:
+                        # route ONCE: the same Routing feeds the trace
+                        # counts and the expert execution
+                        routing = gating.route(
+                            period_params[s]["moe"]["router"],
+                            h.reshape(-1, h.shape[-1]), top_k=cfg.moe.top_k)
+                        cnt = gating.expert_token_counts(
+                            routing, token_mask.reshape(-1)).astype(jnp.int32)
+                    h = moe_mod.moe_block(period_params[s]["moe"], h, cfg.moe,
+                                          cfg.activation, spec=sp,
+                                          phase="prefill", layer=layer,
+                                          routing=routing)
+                else:
+                    h = ffn(period_params[s]["ffn"], h, cfg.activation)
+                x = x + h
+            counts.append(cnt)
+        return x, (tuple(new_caches), jnp.stack(counts))
+
+    if _needs_unroll(sp):
+        per_period, per_counts = [], []
+        for c in range(cfg.num_layers // p):
+            pin = jax.tree.map(lambda a: a[c], (params["periods"], caches))
+            x, (ncs, cnt) = period_body(x, pin, c * p)
+            per_period.append(ncs)
+            per_counts.append(cnt)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_period)
+        counts = jnp.stack(per_counts)
+    else:
+        x, (new_caches, counts) = jax.lax.scan(
+            period_body, x, (params["periods"], caches))
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    if return_hidden:
+        return x, new_caches, counts
+    return _unembed(params, x, cfg), new_caches, counts
+
+
 def decode_step(params, token, caches, cache_len, cfg: ModelConfig, *,
                 spec=None, unshard=False):
     """token: (B,1) int32; caches from init_caches/prefill; cache_len: (B,).

@@ -1,1 +1,5 @@
 from .engine import Engine, ServeConfig, RequestState
+from .scheduler import (Scheduler, SchedulerConfig, ServingMetrics, Ticket,
+                        percentiles)
+from .traffic import (TrafficConfig, TrafficRequest, make_traffic,
+                      run_closed_loop, to_sim_requests)

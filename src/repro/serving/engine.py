@@ -21,16 +21,24 @@ EMA-built paired-load trajectory (re-planned every iteration as gating
 drifts — outputs stay bit-identical, only expert execution order
 changes).
 
-Admission uses full-prompt prefill (batch=1) merged into the batched
-cache slots; the per-iteration expert token counts feed the paired-load
-policy and the deferral decisions, and are exported for the chiplet
-simulator to replay (the JAX engine and the cycle-level sim share one
-workload trace format — see README "Dynamic trajectory scheduling").
+Admission comes in two flavors: the legacy one-shot ``submit`` (full
+prompt prefilled at batch=1 and merged into the batched cache slots) and
+**chunked prefill** (``submit_chunked`` — no compute at admission; each
+iteration's prefill-chunk stage appends up to ``chunk_tokens`` prompt
+tokens per prefilling slot in one batched pass piggybacked on the decode
+batch, so long prompts never block an iteration — the continuous-batching
+scheduler in ``repro.serving.scheduler`` drives this path).  The
+per-iteration expert token counts (decode route stage *and* prefill
+chunks, tagged ``phase``) feed the paired-load policy and the deferral
+decisions, and are exported for the chiplet simulator to replay (the JAX
+engine and the cycle-level sim share one workload trace format — see
+README "Dynamic trajectory scheduling" / "Serving under load").
 """
 from __future__ import annotations
 
 import itertools
 import warnings
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -66,6 +74,14 @@ class ServeConfig:
     buffering_slack: float = 0.0
     theta_min: int = 2
     n_threshold: Optional[int] = None   # default derived from slack
+    chunk_tokens: int = 16              # prefill chunk size (submit_chunked)
+    # Serving must be batching-invariant: a request's tokens may not
+    # depend on who shares the batch.  Capacity dispatch drops tokens
+    # past C = ceil(T*k/E * capacity_factor) per expert, and *which*
+    # tokens overflow depends on the other rows — so by default the
+    # engine raises the capacity factor to the drop-free bound (C = T*k).
+    # Set False for the paper-faithful finite-buffer EP semantics.
+    drop_free: bool = True
     # single MoE execution configuration object (repro.core.strategy):
     # a spec, strategy name, or dict; replaces the old moe_impl/autotune
     # string knobs (kept below as deprecated aliases merged into it)
@@ -104,12 +120,23 @@ class RequestState:
     progress: int = 0                   # sub-layer pointer: 2*layer (+1 = moe pending)
     done: bool = False
     deferred_iterations: int = 0
+    # chunked-prefill lifecycle: "prefill" rows consume chunk_tokens
+    # prompt tokens per iteration until the prompt is exhausted, then
+    # join the decode batch ("decode") with their first sampled token
+    phase: str = "decode"
+    prompt: List[int] = field(default_factory=list)   # pending prompt tokens
+    prefill_pos: int = 0                              # tokens already cached
 
 
 class Engine:
     def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig):
         assert not cfg.is_encoder_decoder, "engine serves LM-family models"
         self.params = params
+        if scfg.drop_free and cfg.moe is not None \
+                and cfg.moe.capacity_factor < cfg.moe.num_experts:
+            import dataclasses
+            cfg = cfg.replace(moe=dataclasses.replace(
+                cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
         self.cfg = cfg
         self.scfg = scfg
         self.p, self.plan = transformer.period_plan(cfg)
@@ -117,7 +144,9 @@ class Engine:
         self.caches = transformer.init_caches(cfg, scfg.max_batch, scfg.max_ctx)
         self.cache_len = jnp.zeros((scfg.max_batch,), jnp.int32)
         self.requests: Dict[str, RequestState] = {}
-        self.free_slots = list(range(scfg.max_batch))
+        # O(1) slot recycling: popleft to assign, append to recycle
+        # (the old list.pop(0) was O(max_batch) per admission)
+        self.free_slots = deque(range(scfg.max_batch))
         self.policy = TokenBufferPolicy.from_slack(scfg.buffering_slack,
                                                    theta_min=scfg.theta_min)
         if scfg.n_threshold is not None:
@@ -128,7 +157,8 @@ class Engine:
         self.iterations = 0
         self.stats = {"deferrals": 0, "expert_loads": 0, "expert_loads_saved": 0,
                       "iterations": 0, "tokens_emitted": 0,
-                      "dynamic_schedules": 0}
+                      "dynamic_schedules": 0,
+                      "prefill_chunks": 0, "prefill_tokens": 0}
         self.trace: List[dict] = []     # per (iter, layer) expert counts
         # per-MoE-layer EMA of observed expert counts — the load vector
         # fed back into the dynamic trajectory scheduler each iteration
@@ -153,10 +183,23 @@ class Engine:
     # admission (full-prompt prefill into a slot)
     # ------------------------------------------------------------------
 
+    def _validate_request(self, prompt: List[int], max_new: int) -> None:
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        if len(prompt) + max_new > self.scfg.max_ctx:
+            raise ValueError(
+                f"request does not fit the context: len(prompt)={len(prompt)}"
+                f" + max_new={max_new} > max_ctx={self.scfg.max_ctx} — "
+                f"shorten the prompt or raise ServeConfig.max_ctx "
+                f"(generation would be silently truncated)")
+
     def submit(self, prompt: List[int], max_new: int) -> str:
+        self._validate_request(prompt, max_new)
         if not self.free_slots:
             raise RuntimeError("engine full — wait for completions")
-        slot = self.free_slots.pop(0)
+        slot = self.free_slots.popleft()
         rid = f"req{next(self._rid)}"
         tokens = jnp.asarray(prompt, jnp.int32)[None]
         logits, caches1 = api.prefill_fn(self.params, {"tokens": tokens},
@@ -175,6 +218,25 @@ class Engine:
         self.requests[rid] = st
         return rid
 
+    def submit_chunked(self, prompt: List[int], max_new: int) -> str:
+        """Admit a request for chunked prefill: no compute happens here.
+
+        The prompt is consumed ``chunk_tokens`` at a time by subsequent
+        :meth:`step` calls (piggybacked on the decode batch), so
+        admission never blocks an iteration; the first token is emitted
+        by the step that caches the final prompt chunk."""
+        self._validate_request(prompt, max_new)
+        if not self.free_slots:
+            raise RuntimeError("engine full — wait for completions")
+        slot = self.free_slots.popleft()
+        rid = f"req{next(self._rid)}"
+        self.cache_len = self.cache_len.at[slot].set(0)
+        st = RequestState(rid=rid, slot=slot, prompt_len=len(prompt),
+                          max_new=max_new, phase="prefill",
+                          prompt=list(prompt))
+        self.requests[rid] = st
+        return rid
+
     def _sample(self, logits) -> int:
         lf = np.asarray(logits, np.float32)
         if self.scfg.temperature <= 0:
@@ -190,14 +252,95 @@ class Engine:
     def active(self) -> List[RequestState]:
         return [r for r in self.requests.values() if not r.done]
 
+    def prefilling(self) -> List[RequestState]:
+        return [r for r in self.requests.values()
+                if not r.done and r.phase == "prefill"]
+
+    def _prefill_chunk_step(self) -> List[Tuple[str, int]]:
+        """Advance every prefilling request by one prompt chunk.
+
+        One batched ``api.prefill_chunk_fn`` call covers all prefilling
+        slots (decode/idle slots ride along fully masked, bit-untouched);
+        per-layer expert counts from the chunk's gate pass feed the
+        workload trace and the LoadTracker EMAs exactly like the decode
+        path's route stage.  Requests whose prompt completes sample
+        their first token from the last valid chunk position — the
+        emission the scheduler timestamps as TTFT."""
+        pre = self.prefilling()
+        if not pre:
+            return []
+        scfg = self.scfg
+        B, K = scfg.max_batch, max(1, scfg.chunk_tokens)
+        tokens = np.zeros((B, K), np.int64)
+        mask = np.zeros((B, K), bool)
+        took: Dict[str, int] = {}
+        for r in pre:
+            k_r = min(K, len(r.prompt) - r.prefill_pos)
+            tokens[r.slot, :k_r] = r.prompt[r.prefill_pos:r.prefill_pos + k_r]
+            mask[r.slot, :k_r] = True
+            took[r.rid] = k_r
+        hid, self.caches, counts = api.prefill_chunk_fn(
+            self.params, jnp.asarray(tokens, jnp.int32), self.caches,
+            self.cache_len, self.cfg, spec=scfg.spec,
+            token_mask=jnp.asarray(mask), return_hidden=True)
+        counts = np.asarray(counts, np.int64)
+        for layer in range(self.L):
+            if self._layer_kind(layer)[1] != "moe":
+                continue
+            cnt = counts[layer // self.p, layer % self.p]
+            tracker = self.load_trackers.setdefault(
+                layer, trajectory.LoadTracker(self.cfg.moe.num_experts,
+                                              decay=scfg.ema_decay))
+            tracker.update(cnt)
+            self.trace.append({
+                "iter": self.iterations, "layer": layer, "phase": "prefill",
+                "counts": cnt.copy(), "order": paired_load_order(cnt),
+                "schedule": "dynamic" if self.dynamic_schedule else "static"})
+            self.stats["expert_loads"] += int((cnt > 0).sum())
+
+        out: List[Tuple[str, int]] = []
+        head = self.params.get("lm_head")
+        head = head if head is not None else self.params["embed"].T
+        newlen = self.cache_len
+        for r in pre:
+            k_r = took[r.rid]
+            newlen = newlen.at[r.slot].add(k_r)
+            r.prefill_pos += k_r
+            self.stats["prefill_tokens"] += k_r
+            if r.prefill_pos < len(r.prompt):
+                continue
+            # prompt fully cached: unembed just this row's final chunk
+            # position, emit the first token, and join decode
+            first = self._sample(hid[r.slot, k_r - 1] @ head)
+            r.generated.append(int(first))
+            r.phase = "decode"
+            r.progress = 0
+            r.prompt = []
+            out.append((r.rid, int(first)))
+            self.stats["tokens_emitted"] += 1
+            if len(r.generated) >= r.max_new:
+                r.done = True
+                self.free_slots.append(r.slot)
+                self.policy.drop(r.rid)
+        self.cache_len = newlen
+        self.stats["prefill_chunks"] += len(pre)
+        return out
+
     def step(self) -> List[Tuple[str, int]]:
-        act = self.active()
-        if not act:
+        if not self.active():
             return []
         self.iterations += 1
         self.stats["iterations"] += 1
         cfg, scfg = self.cfg, self.scfg
         B = scfg.max_batch
+
+        # chunked-prefill stage: every prefilling slot consumes up to
+        # chunk_tokens prompt tokens this iteration (one batched pass,
+        # emitting first tokens for prompts that complete)
+        out = self._prefill_chunk_step()
+        act = [r for r in self.active() if r.phase == "decode"]
+        if not act:
+            return out
 
         # fresh-token embedding for requests starting a new pass
         token_vec = np.zeros((B,), np.int64)
@@ -240,7 +383,6 @@ class Engine:
         self._x = x
 
         # finishers: emit a token, bump cache_len, reset progress
-        out = []
         finish = [r for r in act if not r.done and r.progress == 2 * self.L]
         if finish:
             h = apply_norm(cfg.norm, self.params["final_norm"], x)
@@ -329,7 +471,7 @@ class Engine:
             layer, trajectory.LoadTracker(self.cfg.moe.num_experts,
                                           decay=self.scfg.ema_decay))
         tracker.update(counts)
-        rec = {"iter": self.iterations, "layer": layer,
+        rec = {"iter": self.iterations, "layer": layer, "phase": "decode",
                "counts": counts.copy(),
                "order": paired_load_order(counts),
                "schedule": "dynamic" if self.dynamic_schedule else "static"}

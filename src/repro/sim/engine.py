@@ -49,6 +49,28 @@ class LayerResult:
     def util_curve(self):
         return self.timeline
 
+    def util_series(self, bins: int = 32) -> np.ndarray:
+        """Binned compute-utilization curve in [0, 1].
+
+        Splits the makespan into ``bins`` equal windows and returns the
+        fraction of (chiplet x window) capacity spent in ``compute:*``
+        timeline events (needs ``record_timeline=True``).
+        """
+        P = len(self.peak_buffer_per_chip)
+        span = max(self.latency, 1e-12)
+        width = span / bins
+        busy = np.zeros(bins, np.float64)
+        for t, _chip, kind, dur in self.timeline:
+            if not str(kind).startswith("compute"):
+                continue
+            t0, t1 = t, min(t + dur, span)
+            b0 = min(bins - 1, int(t0 / width))
+            b1 = min(bins - 1, int(max(t1 - 1e-18, t0) / width))
+            for b in range(b0, b1 + 1):
+                lo, hi = b * width, (b + 1) * width
+                busy[b] += max(0.0, min(t1, hi) - max(t0, lo))
+        return busy / (P * width)
+
 
 class _MicroSlice:
     __slots__ = ("uid", "expert", "idx", "bytes", "route", "pos",
@@ -269,6 +291,9 @@ class ChipletSim:
                 t0 = max(now, ddr_free[ch])
                 ddr_free[ch] = t0 + dur
                 ddr_bytes += ms.bytes
+                if self.record_timeline:
+                    timeline.append((t0, entry, f"load:e{ms.expert}:u{ms.uid}",
+                                     dur))
                 heapq.heappush(events, (t0 + dur, next(self._seq), "load_done", ms))
 
         def try_start_compute():
@@ -286,7 +311,8 @@ class ChipletSim:
                 busy[c] += dur
                 compute_free[c] = now + dur
                 if self.record_timeline:
-                    timeline.append((now, c, f"compute:e{ms.expert}", dur))
+                    timeline.append((now, c, f"compute:e{ms.expert}:u{ms.uid}",
+                                     dur))
                 heapq.heappush(events, (now + dur, next(self._seq), "compute_done", ms))
                 # Rule 1: forward simultaneously with compute
                 if not ms.last:
@@ -310,6 +336,9 @@ class ChipletSim:
                 dur = ms.bytes / hw.d2d_gbps + hops * hw.d2d_hop_latency
                 port_free[c] = now + dur
                 d2d_bytes += ms.bytes
+                if self.record_timeline:
+                    timeline.append((now, c, f"xfer:e{ms.expert}:u{ms.uid}",
+                                     dur))
                 heapq.heappush(events, (now + dur, next(self._seq), "xfer_done", (ms, c, dst)))
 
         def maybe_release(ms: _MicroSlice, chip: int):

@@ -103,6 +103,59 @@ def make_requests(tokens_per_iter: int, num_chiplets: int, seed: int,
     return reqs
 
 
+def workload_from_counts(counts, num_chiplets: int,
+                         per_request: Dict[str, List[int]] | None = None
+                         ) -> LayerWorkload:
+    """Engine-observed per-expert totals -> a chiplet-resolved workload.
+
+    The serving engine traces total activations per expert (its tokens
+    have no chiplet placement); the simulator wants (chiplets, E).
+    Tokens are striped across chiplets round-robin with a per-expert
+    rotating offset so the remainder does not always land on chiplet 0.
+    Exactness invariant (tested): ``result.expert_totals == counts``.
+    """
+    counts = np.asarray(counts, np.int64)
+    E = counts.shape[0]
+    out = np.zeros((num_chiplets, E), np.int64)
+    for e in range(E):
+        q, r = divmod(int(counts[e]), num_chiplets)
+        out[:, e] = q
+        for j in range(r):
+            out[(e + j) % num_chiplets, e] += 1
+    return LayerWorkload(counts=out, per_request=dict(per_request or {}))
+
+
+def workloads_from_trace(trace, num_chiplets: int):
+    """Replay a serving-engine workload trace into simulator workloads.
+
+    ``trace`` is ``Engine.trace``: records with ``iter`` / ``layer`` /
+    ``counts`` (see README trace-format spec; prefill-chunk and decode
+    records both qualify).  Returns ``[(iter, layer, LayerWorkload)]``
+    in trace order — feed each through ``sim.engine.simulate_layer`` or
+    ``sim.modes`` to cross-validate the engine's schedule decisions.
+    """
+    return [(int(rec["iter"]), int(rec["layer"]),
+             workload_from_counts(rec["counts"], num_chiplets))
+            for rec in trace]
+
+
+def trace_expert_totals(trace) -> Dict[int, np.ndarray]:
+    """Aggregate a serving-engine trace to per-layer expert loads.
+
+    The engine<->simulator conformance check: these totals must equal
+    the summed ``expert_totals`` of the replayed workloads exactly.
+    """
+    totals: Dict[int, np.ndarray] = {}
+    for rec in trace:
+        c = np.asarray(rec["counts"], np.int64)
+        layer = int(rec["layer"])
+        if layer in totals:
+            totals[layer] = totals[layer] + c
+        else:
+            totals[layer] = c.copy()
+    return totals
+
+
 def iteration_workloads(spec: ModelSpec, tokens_per_iter: int,
                         num_chiplets: int, seed: int) -> List[LayerWorkload]:
     """One workload per MoE layer for a single forward iteration."""

@@ -53,6 +53,42 @@ def test_continuous_batching_matches_sequential(setup):
     assert batched[1] == solo_b[0]
 
 
+def test_submit_rejects_oversized_requests(setup):
+    """Satellite regression: len(prompt) + max_new > max_ctx raises a
+    clear ValueError up front instead of silently truncating generation
+    at the max_ctx - 1 boundary — on both admission paths."""
+    cfg, params = setup
+    eng = Engine(params, cfg, ServeConfig(max_batch=2, max_ctx=16))
+    with pytest.raises(ValueError, match="max_ctx"):
+        eng.submit(list(range(1, 13)), max_new=5)        # 12 + 5 > 16
+    with pytest.raises(ValueError, match="max_ctx"):
+        eng.submit_chunked(list(range(1, 13)), max_new=5)
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit([], max_new=2)
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit([1, 2], max_new=0)
+    assert len(eng.free_slots) == 2, "rejected requests hold no slot"
+    # the boundary case fits (and is not truncated): 11 + 5 == 16
+    rid = eng.submit(list(range(1, 12)), max_new=5)
+    outs = eng.run()
+    assert len(outs[rid]) == 5
+
+
+def test_slot_recycling_constant_time(setup):
+    """Satellite regression: slots recycle through a deque —
+    admission pops left, completion appends right, both O(1)."""
+    from collections import deque
+    cfg, params = setup
+    eng = Engine(params, cfg, ServeConfig(max_batch=3, max_ctx=32))
+    assert isinstance(eng.free_slots, deque)
+    r0 = eng.submit([1, 2], max_new=2)
+    assert eng.requests[r0].slot == 0
+    eng.run()
+    assert list(eng.free_slots) == [1, 2, 0]             # recycled to tail
+    r1 = eng.submit([3, 4], max_new=2)
+    assert eng.requests[r1].slot == 1                    # FIFO slot reuse
+
+
 def test_slot_lifecycle(setup):
     cfg, params = setup
     eng = Engine(params, cfg, ServeConfig(max_batch=2, max_ctx=32))
