@@ -19,6 +19,12 @@ Compares ``artifacts/bench/*.json`` (produced by this run's
   strategy row's HLO collective bytes must stay within --tolerance
   (byte counts are exact per jax version, so drift means the lowering
   or the registry dispatch genuinely changed).
+* BENCH_serving.json — deterministic metrics on two clocks: the
+  iteration-counted latency percentiles and exact token/completion
+  counts, plus the modeled chiplet-array-seconds percentiles and their
+  agreement ratio against the ``sim.modes.replay_trace`` referee
+  (within 5%).  The wall-clock block is informational, never gated
+  (see docs/benchmarks.md).
 
 Usage:
   PYTHONPATH=src python benchmarks/check_regression.py \
@@ -211,10 +217,36 @@ def check_serving(base, cur, tol, failures):
                 failures.append(
                     f"BENCH_serving.{metric}.{q}: {bv:.3f} -> {cv:.3f} "
                     f"iters (+{cv / max(bv, 1e-9) - 1:.0%} > {tol:.0%})")
+    # modeled chiplet-array seconds — deterministic (Table-I constants,
+    # no host timing), so drift is gated exactly like the iteration
+    # metrics; wall_clock_informational is deliberately never checked
+    bm, cm = base.get("modeled") or {}, cur.get("modeled") or {}
+    for metric in ("ttft_s", "tpot_s", "queue_delay_s"):
+        for q, bv in (bm.get(metric) or {}).items():
+            cv = (cm.get(metric) or {}).get(q)
+            if cv is None or bv != bv or cv != cv:   # NaN-tolerant
+                continue
+            if cv > bv * (1 + tol) + 1e-9:
+                failures.append(
+                    f"BENCH_serving.modeled.{metric}.{q}: {bv:.3e} -> "
+                    f"{cv:.3e}s (+{cv / max(bv, 1e-9) - 1:.0%} > {tol:.0%})")
+    if bm:
+        if not cm:
+            failures.append("BENCH_serving: modeled metrics disappeared — "
+                            "the engine's cost-model clock is gated")
+        else:
+            ratio = cm.get("referee_ratio")
+            if ratio is None or abs(ratio - 1.0) > 0.05:
+                failures.append(
+                    f"BENCH_serving.modeled.referee_ratio: {ratio} — the "
+                    f"closed-form clock no longer agrees with the "
+                    f"sim.modes.replay_trace referee within 5%")
     print(f"BENCH_serving: {cur.get('completed')} completed in "
           f"{cur.get('iterations')} iterations, ttft p50="
           f"{(cur.get('ttft_iters') or {}).get('p50')} "
-          f"(baseline {(base.get('ttft_iters') or {}).get('p50')})")
+          f"(baseline {(base.get('ttft_iters') or {}).get('p50')}), "
+          f"modeled ttft p50={(cm.get('ttft_s') or {}).get('p50')}s, "
+          f"referee_ratio={cm.get('referee_ratio')}")
 
 
 def main(argv=None):

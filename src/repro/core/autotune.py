@@ -108,6 +108,23 @@ class HardwareProfile:
                    vmem_bytes=hw.buffer_bytes)
 
     @classmethod
+    def from_chiplet_array(cls, hw=None) -> "HardwareProfile":
+        """Aggregate whole-array profile (Table I, all chiplets summed):
+        total MAC throughput feeding on total DDR bandwidth — the
+        resource view of the serial expert *flow* the chiplet referee
+        (``sim.modes.simulate_trajectory``) prices.  This is the profile
+        the serving engine's modeled clock uses: machine-independent by
+        construction (pure Table-I constants, never detected)."""
+        if hw is None:
+            from repro.sim.hardware import PROTOTYPE_2X2 as hw
+        return cls(name=f"chiplet-array-{hw.rows}x{hw.cols}",
+                   peak_flops=hw.tops * hw.num_chiplets,
+                   mem_bw=hw.ddr_total,
+                   link_bw=hw.d2d_gbps,
+                   link_latency=hw.d2d_hop_latency,
+                   vmem_bytes=hw.buffer_bytes)
+
+    @classmethod
     def from_tpu(cls) -> "HardwareProfile":
         """v5e-class constants shared with ``launch.analysis``."""
         from repro.launch import analysis
@@ -198,6 +215,98 @@ def load_rows(E: int, C: int, assignments: float,
         rows += r
         active += r >= 0.5
     return rows, max(1, active)
+
+
+def streaming_layer_cost(E: int, C: int, d: int, de: int, n_mats: int,
+                         assignments: float, profile: HardwareProfile, *,
+                         dtype_bytes: int = 2,
+                         load: Optional[Tuple[float, ...]] = None
+                         ) -> Dict[str, float]:
+    """Closed-form seconds for one MoE layer run as the paper's expert
+    *flow*: DDR streams expert weights in trajectory order while the
+    array computes the previously-loaded expert (double-buffered).
+
+    The structure mirrors :func:`load_rows`'s two regimes — ``load=None``
+    prices the shape-only static plan (every expert loaded and computed
+    at its padded capacity ``C``), a load vector prices the dynamic
+    trajectory (observed rows, idle experts skip their weight stream).
+    ``total_s`` is ``fill + max(compute chain, remaining DDR chain)``:
+    the first expert's weight load is exposed, after which the stream
+    overlaps compute — the ideal-overlap bound the paired trajectory
+    approaches.  Exact against the event referee at both extremes
+    (compute-bound: ``fill + compute``; DDR-bound: ``active`` serial
+    loads); in between it lower-bounds the event interleave.
+    Deliberately closed-form: the discrete event referee is
+    ``sim.modes.simulate_trajectory``, and their agreement is asserted,
+    not assumed (tests/test_modeled_clock).
+
+    Dispatch/combine one-hot FLOPs are excluded to match the referee's
+    scope (it prices the expert flow only).
+    """
+    rows, active = load_rows(E, C, assignments, load)
+    expert_bytes = float(n_mats * d * de * dtype_bytes)
+    t_comp = 2.0 * n_mats * rows * d * de / profile.peak_flops
+    t_ddr = active * expert_bytes / profile.mem_bw
+    t_fill = expert_bytes / profile.mem_bw
+    return {"total_s": t_fill + max(t_comp, t_ddr - t_fill),
+            "t_comp_s": t_comp, "t_ddr_s": t_ddr, "t_fill_s": t_fill,
+            "rows": rows, "active": float(active)}
+
+
+@dataclass(frozen=True)
+class ServingCostModel:
+    """Per-MoE-layer modeled seconds for the serving engine's clock.
+
+    One frozen bundle of model-shape constants + a
+    :class:`HardwareProfile`, so the engine can turn each workload-trace
+    record (observed per-expert counts + schedule policy) into
+    deterministic predicted seconds: a *static* schedule prices the
+    shape-only padded plan (it knows nothing of the gating), a *dynamic*
+    schedule prices the observed load along the trajectory.  The default
+    profile is :meth:`HardwareProfile.from_chiplet_array` — pure Table-I
+    constants, so modeled TTFT/TPOT are machine-independent and the
+    serving benchmark can gate them (``benchmarks/check_regression.py``).
+
+    ``dtype_bytes`` defaults to the prototype's bf16 weights regardless
+    of the host dtype: the clock models the paper's chiplet array, not
+    the machine the engine happens to run on (matching the referee's
+    ``ModelSpec.expert_bytes``).
+    """
+
+    profile: HardwareProfile
+    num_experts: int
+    d_model: int
+    d_expert: int
+    n_mats: int
+    top_k: int
+    capacity_factor: float
+    dtype_bytes: int = 2
+
+    @classmethod
+    def from_config(cls, cfg,
+                    profile: Optional[HardwareProfile] = None
+                    ) -> "ServingCostModel":
+        """Build from a repro ModelConfig (must have MoE)."""
+        assert cfg.moe is not None, "cost model needs an MoE config"
+        return cls(profile=profile or HardwareProfile.from_chiplet_array(),
+                   num_experts=cfg.moe.num_experts, d_model=cfg.d_model,
+                   d_expert=cfg.moe.d_expert,
+                   n_mats=3 if cfg.activation == "swiglu" else 2,
+                   top_k=cfg.moe.top_k,
+                   capacity_factor=cfg.moe.capacity_factor)
+
+    def layer_s(self, counts, *, dynamic: bool = False) -> float:
+        """Modeled seconds for one layer's observed expert counts."""
+        total = float(sum(float(c) for c in counts))
+        tokens = max(1, math.ceil(total / max(1, self.top_k)))
+        C = _cap(tokens, self.top_k, self.num_experts, self.capacity_factor)
+        load = None
+        if dynamic and total > 0:
+            load = tuple(float(c) / total for c in counts)
+        return streaming_layer_cost(
+            self.num_experts, C, self.d_model, self.d_expert, self.n_mats,
+            total, self.profile, dtype_bytes=self.dtype_bytes,
+            load=load)["total_s"]
 
 
 def feasible_modes(B: int, S: int, P: int) -> Tuple[str, ...]:

@@ -51,8 +51,12 @@ SCHEDULE_POLICIES = ("static", "dynamic")
 class Schedule:
     """One expert-trajectory decision for one MoE layer call.
 
-    ``order`` is the host-side trajectory (a permutation of expert ids,
-    hot/cold interleaved for ``dynamic``); ``None`` means *derive it
+    ``order`` is the trajectory (a permutation of expert ids, hot/cold
+    interleaved for ``dynamic``): a host-side tuple, **or** a traced
+    ``(E,)`` int array when the schedule is constructed inside a jitted
+    computation (the serving engine's fused mega-steps feed the EMA
+    trajectory in as a traced argument so the compiled step never
+    retraces as the trajectory drifts).  ``None`` means *derive it
     in-graph* from the call's own routing counts when the policy is
     dynamic, or the identity trajectory when static.  ``pairs`` are the
     complementary (hot, cold) stream pairs of the paired-load policy;
@@ -72,7 +76,10 @@ class Schedule:
         if self.policy not in SCHEDULE_POLICIES:
             raise ValueError(f"unknown schedule policy {self.policy!r} "
                              f"(want {SCHEDULE_POLICIES})")
-        if self.order is not None:
+        # host sequences coerce to an int tuple; jax arrays / tracers
+        # (anything carrying a dtype) pass through untouched so a
+        # Schedule can be built at trace time from a traced order
+        if self.order is not None and not hasattr(self.order, "dtype"):
             object.__setattr__(self, "order",
                                tuple(int(e) for e in self.order))
 

@@ -120,6 +120,25 @@ def prefill_chunk_fn(params, tokens, caches, cache_len, cfg: ModelConfig, *,
                                      return_hidden=return_hidden)
 
 
+# ---------------------------------------------------------------------------
+# serving decode segments (LM-family only)
+#
+# The per-layer sub-steps the serving engine composes: the legacy eager
+# loop calls them one layer at a time, the fused mega-step engine
+# (repro.serving.megastep) traces the same functions into one compiled
+# segment per MoE-boundary span.  Re-exported here so serving code stays
+# on the model-API surface.
+# ---------------------------------------------------------------------------
+
+decode_embed_merge = transformer.decode_embed_merge
+decode_mixer = transformer.decode_mixer
+decode_route = transformer.decode_route
+decode_moe_exec = transformer.decode_moe_exec
+decode_ffn = transformer.decode_ffn
+decode_span = transformer.decode_span
+decode_logits = transformer.decode_logits
+
+
 def decode_fn(params, token, caches, cache_len, cfg: ModelConfig, *,
               spec=None, unshard=False):
     """One decode step -> (logits, new caches)."""

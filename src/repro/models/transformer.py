@@ -421,6 +421,158 @@ def prefill_chunk(params, tokens, caches, cache_len, cfg: ModelConfig, *,
     return _unembed(params, x, cfg), new_caches, counts
 
 
+# ---------------------------------------------------------------------------
+# serving decode segments (masked per-layer sub-steps)
+# ---------------------------------------------------------------------------
+#
+# The serving engine executes the network layer by layer so Algorithm 2
+# can defer requests exactly at MoE boundaries.  These entry points are
+# the single source of truth for that per-layer math: the engine's
+# legacy eager loop calls them one layer at a time, and the fused
+# mega-steps (repro.serving.megastep) trace the same functions into one
+# compiled segment per MoE-boundary span — bit-identical by
+# construction.  All row selection is by boolean (B,) masks realized as
+# jnp.where merges, so an all-False mask is a bitwise no-op (matching
+# the eager loop's skip).
+
+_PLAN_CACHE: dict = {}
+
+
+def cached_period_plan(cfg: ModelConfig):
+    """Memoized :func:`period_plan` (configs are frozen dataclasses;
+    unhashable ones fall through to the direct computation)."""
+    try:
+        hit = _PLAN_CACHE.get(cfg)
+    except TypeError:                      # unhashable config
+        return period_plan(cfg)
+    if hit is None:
+        hit = _PLAN_CACHE[cfg] = period_plan(cfg)
+    return hit
+
+
+def _layer_slot(params, layer: int, p: int):
+    """Parameters of one absolute layer out of the period-stacked tree."""
+    period_idx, slot = divmod(layer, p)
+    return jax.tree.map(lambda a: a[period_idx], params["periods"][slot])
+
+
+def decode_embed_merge(params, x, token_vec, start_mask, cfg: ModelConfig):
+    """Embed the fresh tokens of rows starting a new pass; other rows
+    keep their carried residual stream.  token_vec: (B,) int."""
+    emb = params["embed"][jnp.asarray(token_vec)][:, None, :]
+    return jnp.where(jnp.asarray(start_mask)[:, None, None], emb, x)
+
+
+def decode_mixer(params, x, caches, cache_len, cfg: ModelConfig,
+                 layer: int, mask):
+    """Masked one-token mixer (attention / SSM) step for one layer.
+
+    Only ``mask`` rows advance: their cache entry and residual stream
+    update; everything else is bit-untouched.  Returns (x, caches) with
+    the full stacked cache tuple rebuilt functionally.
+    """
+    p, plan = cached_period_plan(cfg)
+    mixer, _ = plan[layer % p]
+    period_idx, slot_i = divmod(layer, p)
+    slot = _layer_slot(params, layer, p)
+    mask = jnp.asarray(mask)
+    h = apply_norm(cfg.norm, slot["norm1"], x)
+    cache = jax.tree.map(lambda a: a[period_idx], caches[slot_i])
+    if mixer == "attn":
+        h, new_kv = attn_mod.attention_decode(
+            slot["attn"], h, cache.kv, cache_len,
+            n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta)
+        new_cache = SlotCache(new_kv, cache.ssm)
+    else:
+        h, new_state = ssm_mod.mamba2_decode(slot["ssm"], h, cache.ssm,
+                                             cfg.ssm, cfg.d_model)
+        new_cache = SlotCache(cache.kv, new_state)
+
+    # masked cache update (only active slots advance)
+    def upd(old_stack, old, new):
+        if not hasattr(new, "ndim") or new.ndim == 0:
+            return old_stack
+        m = mask.reshape((-1,) + (1,) * (new.ndim - 1))
+        merged = jnp.where(m, new, old)
+        return old_stack.at[period_idx].set(merged)
+
+    caches = tuple(
+        c if i != slot_i else jax.tree.map(
+            lambda stack, o, n: upd(stack, o, n), caches[slot_i], cache,
+            new_cache)
+        for i, c in enumerate(caches))
+    return jnp.where(mask[:, None, None], x + h, x), caches
+
+
+def decode_route(params, x, cfg: ModelConfig, layer: int, count_mask=None):
+    """Pipeline *route* stage at one MoE boundary: normed activations +
+    Routing for every slot row (routed once — the same Routing feeds
+    deferral, the workload trace, and the expert execution).  With a
+    ``count_mask`` the per-expert token counts over those rows are
+    computed in-graph too (the fused path fetches them in one transfer
+    instead of a separate eager count pass)."""
+    from repro.core import gating
+    p, _ = cached_period_plan(cfg)
+    slot = _layer_slot(params, layer, p)
+    h = apply_norm(cfg.norm, slot["norm2"], x)
+    routing = gating.route(slot["moe"]["router"], h[:, 0, :],
+                           top_k=cfg.moe.top_k)
+    counts = None
+    if count_mask is not None:
+        counts = gating.expert_token_counts(routing,
+                                            jnp.asarray(count_mask))
+    return h, routing, counts
+
+
+def decode_moe_exec(params, x, h, routing, cfg: ModelConfig, layer: int,
+                    mask, *, spec=None, schedule=None):
+    """Dispatch + combine stages at one MoE boundary: execute the
+    experts on the already-routed activations (along the EMA trajectory
+    when ``schedule`` is dynamic) and merge the masked residual."""
+    p, _ = cached_period_plan(cfg)
+    slot = _layer_slot(params, layer, p)
+    mask = jnp.asarray(mask)
+    h = moe_mod.moe_block(slot["moe"], h, cfg.moe, cfg.activation,
+                          spec=spec, phase="decode", layer=layer,
+                          routing=routing, schedule=schedule)
+    return jnp.where(mask[:, None, None], x + h, x)
+
+
+def decode_ffn(params, x, cfg: ModelConfig, layer: int, mask):
+    """Masked dense-FFN sub-step (no-op for ffn_kind == 'none')."""
+    p, plan = cached_period_plan(cfg)
+    _, ffn_kind = plan[layer % p]
+    if ffn_kind == "none":
+        return x
+    slot = _layer_slot(params, layer, p)
+    mask = jnp.asarray(mask)
+    h = apply_norm(cfg.norm, slot["norm2"], x)
+    h = ffn(slot["ffn"], h, cfg.activation)
+    return jnp.where(mask[:, None, None], x + h, x)
+
+
+def decode_span(params, x, caches, cache_len, cfg: ModelConfig,
+                lo: int, hi: int, mask):
+    """Run the non-MoE layers ``[lo, hi)`` (mixer + dense FFN each) for
+    the masked rows — the body of one mega-step segment between MoE
+    boundaries (which must not contain an MoE layer)."""
+    p, plan = cached_period_plan(cfg)
+    for layer in range(lo, hi):
+        assert plan[layer % p][1] != "moe", \
+            f"layer {layer} is an MoE boundary, not span interior"
+        x, caches = decode_mixer(params, x, caches, cache_len, cfg,
+                                 layer, mask)
+        x = decode_ffn(params, x, cfg, layer, mask)
+    return x, caches
+
+
+def decode_logits(params, x, cfg: ModelConfig):
+    """Final norm + unembed of the carried (B,1,d) residual stream."""
+    h = apply_norm(cfg.norm, params["final_norm"], x)
+    return _unembed(params, h, cfg)
+
+
 def decode_step(params, token, caches, cache_len, cfg: ModelConfig, *,
                 spec=None, unshard=False):
     """token: (B,1) int32; caches from init_caches/prefill; cache_len: (B,).

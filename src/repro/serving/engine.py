@@ -2,13 +2,26 @@
 
 Continuous-batching decode engine for LM-family models.  Each forward
 iteration advances every active request by one token, executing the
-network **layer by layer** so the engine can apply the paper's token
-buffering exactly where Algorithm 2 specifies: *after* a layer's gate
-is computed and *before* its experts execute.  A deferred request keeps
-its post-attention hidden state (``held_x``) and sub-layer progress and
-resumes from the same MoE boundary in a later iteration — outputs are
-bit-identical to an undeferred run (asserted by tests); only latency
-changes.
+network at MoE-boundary granularity so the engine can apply the paper's
+token buffering exactly where Algorithm 2 specifies: *after* a layer's
+gate is computed and *before* its experts execute.  A deferred request
+keeps its post-attention hidden state (the carried residual stream) and
+sub-layer progress and resumes from the same MoE boundary in a later
+iteration — outputs are bit-identical to an undeferred run (asserted by
+tests); only latency changes.
+
+Two execution paths share one set of per-layer entry points
+(``transformer.decode_*``), so they are bit-identical by construction:
+
+* **fused** (default) — everything between MoE boundaries runs as one
+  donated-buffer jitted mega-step (``repro.serving.megastep``): a
+  steady-state decode iteration is ``k + 1`` compiled dispatches with
+  at most **one host sync per MoE boundary** (a single
+  ``device_get((counts, indices))`` feeding deferral, the workload
+  trace, and the LoadTracker EMA) plus one logits fetch for sampling —
+  counted in ``stats["host_syncs"]`` and pinned by tests;
+* **legacy** (``ServeConfig(fused=False)``, and the automatic fallback
+  under a distributed mesh) — the original eager per-layer Python loop.
 
 Each MoE layer is **routed exactly once per iteration** (the pipeline's
 route stage, ``repro.core.gating``): the same :class:`Routing` drives
@@ -17,9 +30,9 @@ execution (threaded into ``moe_block(routing=...)``), so the gate never
 runs twice.  Per-layer :class:`~repro.core.trajectory.LoadTracker`
 EMAs feed the observed expert counts back into the scheduler; with
 ``ExecutionSpec.schedule == "dynamic"`` each layer executes along the
-EMA-built paired-load trajectory (re-planned every iteration as gating
-drifts — outputs stay bit-identical, only expert execution order
-changes).
+EMA-built paired-load trajectory — in the fused path the trajectory
+enters the compiled segment as a traced ``(E,)`` order array, so
+re-planning every iteration never retraces.
 
 Admission comes in two flavors: the legacy one-shot ``submit`` (full
 prompt prefilled at batch=1 and merged into the batched cache slots) and
@@ -32,7 +45,14 @@ per-iteration expert token counts (decode route stage *and* prefill
 chunks, tagged ``phase``) feed the paired-load policy and the deferral
 decisions, and are exported for the chiplet simulator to replay (the JAX
 engine and the cycle-level sim share one workload trace format — see
-README "Dynamic trajectory scheduling" / "Serving under load").
+docs/trace-format.md).
+
+Every trace record also carries ``modeled_s`` — the closed-form
+chiplet-array seconds of that layer's observed expert flow
+(``autotune.ServingCostModel``); their per-iteration sum is surfaced as
+``last_step_modeled_s``, which the scheduler's modeled clock integrates
+into machine-independent TTFT/TPOT seconds (see docs/benchmarks.md and
+the ``sim.modes.replay_trace`` referee).
 """
 from __future__ import annotations
 
@@ -47,12 +67,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import gating, trajectory
+from repro.core import autotune, gating, trajectory
 from repro.core.policies import TokenBufferPolicy, paired_load_order
-from repro.models import api, moe as moe_mod, transformer
-from repro.models.layers import apply_norm
-from repro.models import attention as attn_mod, mamba2 as ssm_mod
-from repro.models.mlp import ffn
+from repro.models import api, transformer
+from repro.serving import megastep
 
 _ALIAS_WARNED: set = set()
 
@@ -82,6 +100,11 @@ class ServeConfig:
     # engine raises the capacity factor to the drop-free bound (C = T*k).
     # Set False for the paper-faithful finite-buffer EP semantics.
     drop_free: bool = True
+    # fused mega-step iteration (repro.serving.megastep): one compiled
+    # segment per MoE-boundary span, at most one host sync per boundary.
+    # False keeps the eager per-layer loop (bit-identical, much slower);
+    # a distributed mesh falls back to the legacy loop automatically.
+    fused: bool = True
     # single MoE execution configuration object (repro.core.strategy):
     # a spec, strategy name, or dict; replaces the old moe_impl/autotune
     # string knobs (kept below as deprecated aliases merged into it)
@@ -128,6 +151,10 @@ class RequestState:
     prefill_pos: int = 0                              # tokens already cached
 
 
+# deferral disabled when the activation threshold is effectively inf
+_DEFER_OFF = 1 << 29
+
+
 class Engine:
     def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig):
         assert not cfg.is_encoder_decoder, "engine serves LM-family models"
@@ -139,10 +166,12 @@ class Engine:
                 cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
         self.cfg = cfg
         self.scfg = scfg
-        self.p, self.plan = transformer.period_plan(cfg)
+        self.p, self.plan = transformer.cached_period_plan(cfg)
         self.L = cfg.num_layers
         self.caches = transformer.init_caches(cfg, scfg.max_batch, scfg.max_ctx)
-        self.cache_len = jnp.zeros((scfg.max_batch,), jnp.int32)
+        # host-side cache lengths: mutated in place (no device round-trip
+        # per finished token), converted to a device array at call sites
+        self.cache_len = np.zeros((scfg.max_batch,), np.int32)
         self.requests: Dict[str, RequestState] = {}
         # O(1) slot recycling: popleft to assign, append to recycle
         # (the old list.pop(0) was O(max_batch) per admission)
@@ -158,15 +187,24 @@ class Engine:
         self.stats = {"deferrals": 0, "expert_loads": 0, "expert_loads_saved": 0,
                       "iterations": 0, "tokens_emitted": 0,
                       "dynamic_schedules": 0,
-                      "prefill_chunks": 0, "prefill_tokens": 0}
+                      "prefill_chunks": 0, "prefill_tokens": 0,
+                      # device fetches on the fused path (boundary count
+                      # fetches + logits fetches + prefill count fetches)
+                      "host_syncs": 0}
         self.trace: List[dict] = []     # per (iter, layer) expert counts
         # per-MoE-layer EMA of observed expert counts — the load vector
         # fed back into the dynamic trajectory scheduler each iteration
         self.load_trackers: Dict[int, trajectory.LoadTracker] = {}
-        # latest EMA-built Schedule per layer (written by _defer_cold,
-        # executed by _apply_moe in the same iteration)
+        # latest EMA-built Schedule per layer (written at the boundary,
+        # executed by the following segment / _apply_moe)
         self._layer_schedules: Dict[int, trajectory.Schedule] = {}
         self.dynamic_schedule = scfg.spec.schedule == "dynamic"
+        # closed-form chiplet-array clock: modeled seconds per trace
+        # record, integrated per iteration into last_step_modeled_s
+        self.cost_model = (autotune.ServingCostModel.from_config(cfg)
+                          if cfg.moe is not None else None)
+        self.last_step_modeled_s = 0.0
+        self._iter_modeled_s = 0.0
 
     # ------------------------------------------------------------------
     # slot/param helpers
@@ -211,7 +249,7 @@ class Engine:
                 return big
             return big.at[:, slot:slot + 1].set(small.astype(big.dtype))
         self.caches = jax.tree.map(merge, self.caches, caches1)
-        self.cache_len = self.cache_len.at[slot].set(len(prompt))
+        self.cache_len[slot] = len(prompt)
         st = RequestState(rid=rid, slot=slot, prompt_len=len(prompt), max_new=max_new)
         first = self._sample(logits[0, -1])
         st.generated.append(int(first))
@@ -230,7 +268,7 @@ class Engine:
             raise RuntimeError("engine full — wait for completions")
         slot = self.free_slots.popleft()
         rid = f"req{next(self._rid)}"
-        self.cache_len = self.cache_len.at[slot].set(0)
+        self.cache_len[slot] = 0
         st = RequestState(rid=rid, slot=slot, prompt_len=len(prompt),
                           max_new=max_new, phase="prefill",
                           prompt=list(prompt))
@@ -256,11 +294,21 @@ class Engine:
         return [r for r in self.requests.values()
                 if not r.done and r.phase == "prefill"]
 
-    def _prefill_chunk_step(self) -> List[Tuple[str, int]]:
+    def _record(self, rec: dict) -> None:
+        """Append one workload-trace record, stamped with its modeled
+        chiplet-array seconds (the per-iteration sum becomes
+        ``last_step_modeled_s`` — the scheduler's modeled clock)."""
+        if self.cost_model is not None:
+            rec["modeled_s"] = self.cost_model.layer_s(
+                rec["counts"], dynamic=rec["schedule"] == "dynamic")
+            self._iter_modeled_s += rec["modeled_s"]
+        self.trace.append(rec)
+
+    def _prefill_chunk_step(self, fused: bool = False) -> List[Tuple[str, int]]:
         """Advance every prefilling request by one prompt chunk.
 
-        One batched ``api.prefill_chunk_fn`` call covers all prefilling
-        slots (decode/idle slots ride along fully masked, bit-untouched);
+        One batched ``prefill_chunk`` call covers all prefilling slots
+        (decode/idle slots ride along fully masked, bit-untouched);
         per-layer expert counts from the chunk's gate pass feed the
         workload trace and the LoadTracker EMAs exactly like the decode
         path's route stage.  Requests whose prompt completes sample
@@ -271,7 +319,7 @@ class Engine:
             return []
         scfg = self.scfg
         B, K = scfg.max_batch, max(1, scfg.chunk_tokens)
-        tokens = np.zeros((B, K), np.int64)
+        tokens = np.zeros((B, K), np.int32)
         mask = np.zeros((B, K), bool)
         took: Dict[str, int] = {}
         for r in pre:
@@ -279,10 +327,17 @@ class Engine:
             tokens[r.slot, :k_r] = r.prompt[r.prefill_pos:r.prefill_pos + k_r]
             mask[r.slot, :k_r] = True
             took[r.rid] = k_r
-        hid, self.caches, counts = api.prefill_chunk_fn(
-            self.params, jnp.asarray(tokens, jnp.int32), self.caches,
-            self.cache_len, self.cfg, spec=scfg.spec,
-            token_mask=jnp.asarray(mask), return_hidden=True)
+        if fused:
+            ms = megastep.get_megastep(self.cfg, self.scfg)
+            hid, self.caches, counts = ms.prefill(
+                self.params, tokens, self.caches,
+                jnp.asarray(self.cache_len), jnp.asarray(mask))
+            self.stats["host_syncs"] += 1       # the counts fetch below
+        else:
+            hid, self.caches, counts = api.prefill_chunk_fn(
+                self.params, jnp.asarray(tokens), self.caches,
+                jnp.asarray(self.cache_len), self.cfg, spec=scfg.spec,
+                token_mask=jnp.asarray(mask), return_hidden=True)
         counts = np.asarray(counts, np.int64)
         for layer in range(self.L):
             if self._layer_kind(layer)[1] != "moe":
@@ -292,7 +347,7 @@ class Engine:
                 layer, trajectory.LoadTracker(self.cfg.moe.num_experts,
                                               decay=scfg.ema_decay))
             tracker.update(cnt)
-            self.trace.append({
+            self._record({
                 "iter": self.iterations, "layer": layer, "phase": "prefill",
                 "counts": cnt.copy(), "order": paired_load_order(cnt),
                 "schedule": "dynamic" if self.dynamic_schedule else "static"})
@@ -301,10 +356,9 @@ class Engine:
         out: List[Tuple[str, int]] = []
         head = self.params.get("lm_head")
         head = head if head is not None else self.params["embed"].T
-        newlen = self.cache_len
         for r in pre:
             k_r = took[r.rid]
-            newlen = newlen.at[r.slot].add(k_r)
+            self.cache_len[r.slot] += k_r
             r.prefill_pos += k_r
             self.stats["prefill_tokens"] += k_r
             if r.prefill_pos < len(r.prompt):
@@ -322,17 +376,144 @@ class Engine:
                 r.done = True
                 self.free_slots.append(r.slot)
                 self.policy.drop(r.rid)
-        self.cache_len = newlen
         self.stats["prefill_chunks"] += len(pre)
         return out
 
     def step(self) -> List[Tuple[str, int]]:
+        self.last_step_modeled_s = 0.0
         if not self.active():
             return []
+        self._iter_modeled_s = 0.0
+        from repro.parallel import meshctx
+        if self.scfg.fused and meshctx.get_mesh() is None:
+            out = self._step_fused()
+        else:
+            out = self._step_legacy()
+        self.last_step_modeled_s = self._iter_modeled_s
+        return out
+
+    # ------------------------------------------------------------------
+    # fused mega-step iteration (repro.serving.megastep)
+    # ------------------------------------------------------------------
+
+    def _start_masks(self, act):
+        """Fresh-token vector + start mask for rows beginning a pass."""
+        B = self.scfg.max_batch
+        token_vec = np.zeros((B,), np.int32)
+        start_mask = np.zeros((B,), bool)
+        for r in act:
+            if r.progress == 0:
+                token_vec[r.slot] = r.generated[-1]
+                start_mask[r.slot] = True
+        return token_vec, start_mask
+
+    def _step_fused(self) -> List[Tuple[str, int]]:
         self.iterations += 1
         self.stats["iterations"] += 1
+        out = self._prefill_chunk_step(fused=True)
+        act = [r for r in self.active() if r.phase == "decode"]
+        if not act:
+            return out
+
+        ms = megastep.get_megastep(self.cfg, self.scfg)
+        token_vec, start_mask = self._start_masks(act)
+        cl = jnp.asarray(self.cache_len)
+        bnds = ms.boundaries
+
+        if not bnds:
+            self._x, self.caches, logits = ms.seg_only(
+                self.params, self._x, self.caches, cl, token_vec, start_mask)
+            for r in act:
+                if start_mask[r.slot]:
+                    r.progress = 2 * self.L
+            return self._finish(act, logits, out, fetch=True)
+
+        # segment 0: embed merge + layers [0, b0) + mixer(b0) + route(b0)
+        b0 = bnds[0]
+        for r in act:
+            if r.progress == 0:
+                r.progress = 2 * b0 + 1
+        run_ffn = [r for r in act if not r.done and r.progress == 2 * b0 + 1]
+        self._x, self.caches, h, routing, counts = ms.seg_first(
+            self.params, self._x, self.caches, cl, token_vec, start_mask,
+            self._mask([r.slot for r in run_ffn]))
+        kept, order = self._boundary_fused(b0, run_ffn, routing, counts, ms)
+
+        for j, b in enumerate(bnds[1:], start=1):
+            exec_mask = self._mask([r.slot for r in kept])
+            for r in kept:
+                r.progress = 2 * b + 1
+            run_ffn = [r for r in act
+                       if not r.done and r.progress == 2 * b + 1]
+            self._x, self.caches, h, routing, counts = ms.seg_mid[j - 1](
+                self.params, self._x, self.caches, cl, h, routing, order,
+                exec_mask, self._mask([r.slot for r in run_ffn]))
+            kept, order = self._boundary_fused(b, run_ffn, routing, counts,
+                                               ms)
+
+        self._x, self.caches, logits = ms.seg_last(
+            self.params, self._x, self.caches, cl, h, routing, order,
+            self._mask([r.slot for r in kept]))
+        for r in kept:
+            r.progress = 2 * self.L
+        return self._finish(act, logits, out, fetch=True)
+
+    def _boundary_fused(self, layer, run_ffn, routing, counts_dev, ms):
+        """Host work at one MoE boundary on the fused path: ONE device
+        fetch (counts + routing indices) feeding deferral, the trace,
+        and the EMA — then the shared boundary bookkeeping.  Returns
+        (kept rows, trajectory order for the next segment)."""
+        if not run_ffn:
+            # nobody reaches this boundary: no fetch, no record, no EMA
+            # (matches the legacy loop's `if not run_ffn: continue`)
+            return [], ms.identity_order
+        self.stats["host_syncs"] += 1
+        if self.policy.n_threshold < _DEFER_OFF:
+            counts_np, idx = jax.device_get((counts_dev, routing.indices))
+        else:
+            counts_np, idx = jax.device_get(counts_dev), None
+        kept = self._boundary_host(layer, run_ffn,
+                                   np.asarray(counts_np, np.int64), idx,
+                                   routing)
+        order = ms.identity_order
+        if self.dynamic_schedule and kept:
+            self.stats["dynamic_schedules"] += 1
+            order = jnp.asarray(self._layer_schedules[layer].order, jnp.int32)
+        return kept, order
+
+    def _finish(self, act, logits, out, fetch=False):
+        """Emit a token for every request that completed the pass, bump
+        cache_len, reset progress.  ``fetch=True`` pulls the full logits
+        batch in one transfer (the fused path's single sampling sync)."""
         cfg, scfg = self.cfg, self.scfg
-        B = scfg.max_batch
+        finish = [r for r in act if not r.done and r.progress == 2 * self.L]
+        if not finish:
+            return out
+        if fetch:
+            self.stats["host_syncs"] += 1
+            logits = jax.device_get(logits)
+        for r in finish:
+            tok = self._sample(logits[r.slot, 0])
+            r.generated.append(tok)
+            out.append((r.rid, tok))
+            self.stats["tokens_emitted"] += 1
+            r.progress = 0
+            self.cache_len[r.slot] += 1
+            self.policy.on_forward_pass(r.rid)
+            if len(r.generated) >= r.max_new or \
+                    int(self.cache_len[r.slot]) >= scfg.max_ctx - 1:
+                r.done = True
+                self.free_slots.append(r.slot)
+                self.policy.drop(r.rid)
+        return out
+
+    # ------------------------------------------------------------------
+    # legacy eager per-layer iteration (fused=False / distributed mesh)
+    # ------------------------------------------------------------------
+
+    def _step_legacy(self) -> List[Tuple[str, int]]:
+        self.iterations += 1
+        self.stats["iterations"] += 1
 
         # chunked-prefill stage: every prefilling slot consumes up to
         # chunk_tokens prompt tokens this iteration (one batched pass,
@@ -343,24 +524,14 @@ class Engine:
             return out
 
         # fresh-token embedding for requests starting a new pass
-        token_vec = np.zeros((B,), np.int64)
-        start_mask = np.zeros((B,), bool)
-        for r in act:
-            if r.progress == 0:
-                token_vec[r.slot] = r.generated[-1]
-                start_mask[r.slot] = True
-        emb = self.params["embed"][jnp.asarray(token_vec)][:, None, :]
-        self._x = jnp.where(jnp.asarray(start_mask)[:, None, None], emb, self._x)
-
-        active_slots = {r.slot: r for r in act}
-        x = self._x
+        token_vec, start_mask = self._start_masks(act)
+        x = transformer.decode_embed_merge(self.params, self._x, token_vec,
+                                           start_mask, self.cfg)
         for layer in range(self.L):
-            mixer, ffn_kind = self._layer_kind(layer)
-            slot_params = self._slot_params(layer)
+            _, ffn_kind = self._layer_kind(layer)
             run_attn = [r for r in act if not r.done and r.progress == 2 * layer]
             if run_attn:
-                x = self._apply_mixer(slot_params, x, layer, mixer,
-                                      [r.slot for r in run_attn])
+                x = self._apply_mixer(x, layer, [r.slot for r in run_attn])
                 for r in run_attn:
                     r.progress = 2 * layer + 1
             run_ffn = [r for r in act if not r.done and r.progress == 2 * layer + 1]
@@ -369,41 +540,23 @@ class Engine:
             if ffn_kind == "moe":
                 # route ONCE: the same Routing drives deferral, the
                 # trace, the EMA feedback, and the expert execution
-                h, routing = self._route_moe(slot_params, x)
+                h, routing, _ = transformer.decode_route(self.params, x,
+                                                         self.cfg, layer)
                 run_ffn = self._defer_cold(routing, layer, run_ffn)
                 if not run_ffn:
                     continue
-                x = self._apply_moe(slot_params, x, h, routing,
+                x = self._apply_moe(x, h, routing,
                                     [r.slot for r in run_ffn], layer)
             else:
-                x = self._apply_ffn(slot_params, x, ffn_kind,
-                                    [r.slot for r in run_ffn])
+                x = transformer.decode_ffn(self.params, x, self.cfg, layer,
+                                           self._mask([r.slot for r in run_ffn]))
             for r in run_ffn:
                 r.progress = 2 * (layer + 1)
         self._x = x
 
         # finishers: emit a token, bump cache_len, reset progress
-        finish = [r for r in act if not r.done and r.progress == 2 * self.L]
-        if finish:
-            h = apply_norm(cfg.norm, self.params["final_norm"], x)
-            head = self.params.get("lm_head")
-            logits = h @ (head if head is not None else self.params["embed"].T)
-            newlen = self.cache_len
-            for r in finish:
-                tok = self._sample(logits[r.slot, 0])
-                r.generated.append(tok)
-                out.append((r.rid, tok))
-                self.stats["tokens_emitted"] += 1
-                r.progress = 0
-                newlen = newlen.at[r.slot].add(1)
-                self.policy.on_forward_pass(r.rid)
-                if len(r.generated) >= r.max_new or \
-                        int(newlen[r.slot]) >= scfg.max_ctx - 1:
-                    r.done = True
-                    self.free_slots.append(r.slot)
-                    self.policy.drop(r.rid)
-            self.cache_len = newlen
-        return out
+        logits = transformer.decode_logits(self.params, x, self.cfg)
+        return self._finish(act, logits, out)
 
     # ------------------------------------------------------------------
     # sub-layer executors (masked batched updates)
@@ -414,45 +567,11 @@ class Engine:
         m[slots] = True
         return jnp.asarray(m)
 
-    def _apply_mixer(self, slot_params, x, layer, mixer, slots):
-        cfg = self.cfg
-        mask = self._mask(slots)
-        period_idx, slot_i = divmod(layer, self.p)
-        h = apply_norm(cfg.norm, slot_params["norm1"], x)
-        cache = jax.tree.map(lambda a: a[period_idx], self.caches[slot_i])
-        if mixer == "attn":
-            h, new_cache = attn_mod.attention_decode(
-                slot_params["attn"], h, cache.kv, self.cache_len,
-                n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
-                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta)
-            new_cache = transformer.SlotCache(new_cache, cache.ssm)
-        else:
-            h, new_state = ssm_mod.mamba2_decode(slot_params["ssm"], h, cache.ssm,
-                                                 cfg.ssm, cfg.d_model)
-            new_cache = transformer.SlotCache(cache.kv, new_state)
-
-        # masked cache update (only active slots advance)
-        def upd(old_stack, old, new):
-            if not hasattr(new, "ndim") or new.ndim == 0:
-                return old_stack
-            m = mask.reshape((-1,) + (1,) * (new.ndim - 1))
-            merged = jnp.where(m, new, old)
-            return old_stack.at[period_idx].set(merged)
-
-        self.caches = tuple(
-            c if i != slot_i else jax.tree.map(
-                lambda stack, o, n: upd(stack, o, n), self.caches[slot_i], cache, new_cache)
-            for i, c in enumerate(self.caches))
-        return jnp.where(mask[:, None, None], x + h, x)
-
-    def _route_moe(self, slot_params, x):
-        """Pipeline *route* stage — once per (iteration, MoE layer):
-        normed activations + Routing for every slot row."""
-        cfg = self.cfg
-        h = apply_norm(cfg.norm, slot_params["norm2"], x)
-        routing = gating.route(slot_params["moe"]["router"], h[:, 0, :],
-                               top_k=cfg.moe.top_k)
-        return h, routing
+    def _apply_mixer(self, x, layer, slots):
+        x, self.caches = transformer.decode_mixer(
+            self.params, x, self.caches, jnp.asarray(self.cache_len),
+            self.cfg, layer, self._mask(slots))
+        return x
 
     def _slot_counts(self, routing, slots):
         """Expert counts restricted to the given slots
@@ -460,13 +579,13 @@ class Engine:
         return np.asarray(gating.expert_token_counts(
             routing, self._mask(slots)), np.int64)
 
-    def _defer_cold(self, routing, layer, run_ffn):
-        """Algorithm 2 at the MoE boundary; returns the non-deferred set.
-
-        Also the *schedule* stage's observation point: the counts feed
-        the layer's LoadTracker EMA and the exported workload trace."""
-        idx = np.asarray(routing.indices)          # (B, k)
-        counts = self._slot_counts(routing, [r.slot for r in run_ffn])
+    def _boundary_host(self, layer, run_ffn, counts, idx, routing):
+        """Shared host bookkeeping at one MoE boundary (both paths):
+        LoadTracker EMA update, workload-trace record (with the EMA
+        trajectory under dynamic scheduling), and the Algorithm-2
+        deferral sweep.  ``counts`` are this boundary's observed expert
+        counts (np.int64), ``idx`` the per-row routed expert ids (None
+        when deferral is off).  Returns the non-deferred rows."""
         tracker = self.load_trackers.setdefault(
             layer, trajectory.LoadTracker(self.cfg.moe.num_experts,
                                           decay=self.scfg.ema_decay))
@@ -476,14 +595,15 @@ class Engine:
                "order": paired_load_order(counts),
                "schedule": "dynamic" if self.dynamic_schedule else "static"}
         if self.dynamic_schedule:
-            # build the EMA schedule once; _apply_moe executes along it
+            # build the EMA schedule once; the expert execution that
+            # follows (next segment / _apply_moe) runs along it
             sched = tracker.schedule()
             self._layer_schedules[layer] = sched
             rec["trajectory"] = list(sched.order)
-        self.trace.append(rec)
+        self._record(rec)
         self.stats["expert_loads"] += int((counts > 0).sum())
-        if self.policy.n_threshold >= (1 << 29):
-            return run_ffn
+        if self.policy.n_threshold >= _DEFER_OFF:
+            return list(run_ffn)
         kept = []
         for r in run_ffn:
             acts = [int(e) for e in idx[r.slot]]
@@ -498,13 +618,22 @@ class Engine:
                                                     - (counts2 > 0).sum())
         return kept
 
-    def _apply_moe(self, slot_params, x, h, routing, slots, layer):
+    def _defer_cold(self, routing, layer, run_ffn):
+        """Algorithm 2 at the MoE boundary (legacy eager path); returns
+        the non-deferred set.  Also the *schedule* stage's observation
+        point: the counts feed the layer's LoadTracker EMA and the
+        exported workload trace."""
+        counts = self._slot_counts(routing, [r.slot for r in run_ffn])
+        idx = None
+        if self.policy.n_threshold < _DEFER_OFF:
+            idx = np.asarray(routing.indices)          # (B, k)
+        return self._boundary_host(layer, run_ffn, counts, idx, routing)
+
+    def _apply_moe(self, x, h, routing, slots, layer):
         """Dispatch + combine stages: execute the experts on the already
         routed activations, along the EMA-built trajectory when the
         spec's schedule is dynamic."""
         from repro.parallel import meshctx
-        cfg = self.cfg
-        mask = self._mask(slots)
         schedule = None
         if self.dynamic_schedule:
             schedule = self._layer_schedules[layer]   # built in _defer_cold
@@ -512,20 +641,9 @@ class Engine:
         # a precomputed Routing only matches the single-process layout;
         # distributed strategies re-route their local rows in shard_map
         routing_arg = routing if meshctx.get_mesh() is None else None
-        h = moe_mod.moe_block(slot_params["moe"], h, cfg.moe,
-                              cfg.activation, spec=self.scfg.spec,
-                              phase="decode", layer=layer,
-                              routing=routing_arg, schedule=schedule)
-        return jnp.where(mask[:, None, None], x + h, x)
-
-    def _apply_ffn(self, slot_params, x, ffn_kind, slots):
-        cfg = self.cfg
-        mask = self._mask(slots)
-        if ffn_kind == "none":
-            return x
-        h = apply_norm(cfg.norm, slot_params["norm2"], x)
-        h = ffn(slot_params["ffn"], h, cfg.activation)
-        return jnp.where(mask[:, None, None], x + h, x)
+        return transformer.decode_moe_exec(
+            self.params, x, h, routing_arg, self.cfg, layer,
+            self._mask(slots), spec=self.scfg.spec, schedule=schedule)
 
     # ------------------------------------------------------------------
 

@@ -1,0 +1,195 @@
+"""Fused jitted mega-steps for the serving engine's decode iteration.
+
+The legacy engine walks the network layer by layer in Python, paying a
+host round-trip per sub-layer — fine for exactness, hopeless for the
+paper's fine-grained overlap story, where the host must not be the
+bottleneck.  This module fuses everything *between* MoE boundaries into
+one compiled segment, so a steady-state decode iteration is ``k + 1``
+device dispatches (``k`` = number of MoE layers) with at most one host
+sync per boundary:
+
+* ``seg_first``  — fresh-token embed merge, the full layers before the
+  first boundary ``b0``, the mixer at ``b0``, and the *route* stage at
+  ``b0`` (routing + in-graph expert counts over the rows that will
+  reach the boundary);
+* ``seg_mid[j]`` — expert execution at boundary ``b_{j-1}`` (on the
+  previous segment's routing, along the host-fed EMA trajectory when
+  the schedule is dynamic), the span of full layers up to ``b_j``, the
+  mixer at ``b_j``, and the route stage at ``b_j``;
+* ``seg_last``   — expert execution at the final boundary, the trailing
+  full layers, final norm and logits;
+* ``seg_only``   — the no-MoE degenerate case (one segment end to end).
+
+Between segments the host does exactly the work that genuinely needs
+host values: the Algorithm-2 deferral decision, the workload-trace
+record, and the LoadTracker EMA update — one
+``jax.device_get((counts, indices))`` per boundary.  Every segment body
+is built from the same ``transformer.decode_*`` entry points the legacy
+eager loop calls, so fused and legacy iterations are bit-identical by
+construction (asserted token-for-token and trace-for-trace in
+``tests/test_megastep.py``).
+
+Residual stream and caches are donated (``donate_argnums``) — the
+engine rebinds both from each segment's outputs, so decode steps run
+without per-iteration buffer growth.  Row selection is by traced
+boolean masks and the dynamic trajectory enters as a traced ``(E,)``
+order array, so steady-state decode (and deferral/finish churn) never
+retraces: ``MegaStep.traces`` counts trace events and the test suite
+pins it flat after warmup.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import trajectory
+from repro.kernels import ops as kops
+from repro.models import moe as moe_mod, transformer
+
+
+class MegaStep:
+    """Compiled decode segments + chunked-prefill step for one
+    (model config, execution spec, engine geometry) cell.
+
+    Instances are cached per configuration *and* per ambient kernel /
+    sorted-dispatch flag (see :func:`get_megastep`): the flags are read
+    at trace time inside ``ExecutionSpec.scope()``, so a segment traced
+    with kernels on must never be reused with kernels off.
+    """
+
+    def __init__(self, cfg, spec, *, max_batch: int, max_ctx: int,
+                 chunk_tokens: int):
+        self.cfg = cfg
+        self.spec = spec
+        p, plan = transformer.cached_period_plan(cfg)
+        L = cfg.num_layers
+        self.boundaries: List[int] = [l for l in range(L)
+                                      if plan[l % p][1] == "moe"]
+        self.dynamic = spec is not None and spec.schedule == "dynamic"
+        E = cfg.moe.num_experts if cfg.moe else 1
+        # the static trajectory: canonical order (a no-op permutation);
+        # dynamic segments overwrite it with the host-fed EMA order
+        self.identity_order = jnp.arange(E, dtype=jnp.int32)
+        # trace-event counter: each compiled-segment (re)trace bumps it
+        # once (Python side effect in the traced body) — the recompile
+        # guard in tests/test_megastep.py reads it
+        self.traces = 0
+        self._build()
+
+    # ------------------------------------------------------------------
+
+    def _schedule(self, order):
+        """The per-boundary Schedule executed inside a segment: the
+        host-fed EMA trajectory as a traced order (dynamic), or None
+        (static — the untouched fast path)."""
+        if not self.dynamic:
+            return None
+        return trajectory.Schedule(policy="dynamic", order=order)
+
+    def _build(self):
+        cfg, spec = self.cfg, self.spec
+        L = cfg.num_layers
+        bnds = self.boundaries
+
+        def prefill(params, tokens, caches, cache_len, token_mask):
+            self.traces += 1
+            return transformer.prefill_chunk(
+                params, tokens, caches, cache_len, cfg, spec=spec,
+                token_mask=token_mask, return_hidden=True)
+
+        self.prefill = jax.jit(prefill, donate_argnums=(2,))
+
+        if not bnds:
+            def only(params, x, caches, cache_len, token_vec, start_mask):
+                self.traces += 1
+                x = transformer.decode_embed_merge(params, x, token_vec,
+                                                   start_mask, cfg)
+                x, caches = transformer.decode_span(params, x, caches,
+                                                    cache_len, cfg, 0, L,
+                                                    start_mask)
+                return x, caches, transformer.decode_logits(params, x, cfg)
+
+            self.seg_only = jax.jit(only, donate_argnums=(1, 2))
+            self.seg_first = self.seg_mid = self.seg_last = None
+            return
+
+        b0 = bnds[0]
+
+        def first(params, x, caches, cache_len, token_vec, start_mask,
+                  count_mask):
+            self.traces += 1
+            x = transformer.decode_embed_merge(params, x, token_vec,
+                                               start_mask, cfg)
+            x, caches = transformer.decode_span(params, x, caches, cache_len,
+                                                cfg, 0, b0, start_mask)
+            x, caches = transformer.decode_mixer(params, x, caches, cache_len,
+                                                 cfg, b0, start_mask)
+            h, routing, counts = transformer.decode_route(params, x, cfg, b0,
+                                                          count_mask)
+            return x, caches, h, routing, counts
+
+        self.seg_first = jax.jit(first, donate_argnums=(1, 2))
+
+        def make_mid(b_prev: int, b: int):
+            def mid(params, x, caches, cache_len, h, routing, order,
+                    exec_mask, count_mask):
+                self.traces += 1
+                x = transformer.decode_moe_exec(
+                    params, x, h, routing, cfg, b_prev, exec_mask,
+                    spec=spec, schedule=self._schedule(order))
+                x, caches = transformer.decode_span(
+                    params, x, caches, cache_len, cfg, b_prev + 1, b,
+                    exec_mask)
+                x, caches = transformer.decode_mixer(
+                    params, x, caches, cache_len, cfg, b, exec_mask)
+                h, routing, counts = transformer.decode_route(params, x, cfg,
+                                                              b, count_mask)
+                return x, caches, h, routing, counts
+            return jax.jit(mid, donate_argnums=(1, 2))
+
+        self.seg_mid = [make_mid(bnds[j - 1], bnds[j])
+                        for j in range(1, len(bnds))]
+
+        b_tail = bnds[-1]
+
+        def last(params, x, caches, cache_len, h, routing, order, exec_mask):
+            self.traces += 1
+            x = transformer.decode_moe_exec(
+                params, x, h, routing, cfg, b_tail, exec_mask,
+                spec=spec, schedule=self._schedule(order))
+            x, caches = transformer.decode_span(params, x, caches, cache_len,
+                                                cfg, b_tail + 1, L, exec_mask)
+            return x, caches, transformer.decode_logits(params, x, cfg)
+
+        self.seg_last = jax.jit(last, donate_argnums=(1, 2))
+        self.seg_only = None
+
+
+_CACHE: dict = {}
+
+
+def get_megastep(cfg, scfg) -> MegaStep:
+    """The (cached) MegaStep for one engine configuration.
+
+    Keyed on everything that changes the compiled segments: the model
+    config, the execution spec, the engine geometry, and the *ambient*
+    kernel / sorted-dispatch flags (contextvars read at trace time).
+    Called once per engine iteration — a dict hit in the steady state.
+    Unhashable configs fall back to an uncached instance.
+    """
+    try:
+        key = (cfg, scfg.spec, scfg.max_batch, scfg.max_ctx,
+               scfg.chunk_tokens, kops.kernels_enabled(),
+               moe_mod.sorted_dispatch_enabled())
+        hash(key)
+    except TypeError:
+        return MegaStep(cfg, scfg.spec, max_batch=scfg.max_batch,
+                        max_ctx=scfg.max_ctx, chunk_tokens=scfg.chunk_tokens)
+    ms = _CACHE.get(key)
+    if ms is None:
+        ms = _CACHE[key] = MegaStep(cfg, scfg.spec, max_batch=scfg.max_batch,
+                                    max_ctx=scfg.max_ctx,
+                                    chunk_tokens=scfg.chunk_tokens)
+    return ms

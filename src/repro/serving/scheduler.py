@@ -30,6 +30,20 @@ benchmark baselines machine-independent):
 * **queue delay** — arrival -> slot admission,
 
 aggregated into p50/p95/p99 by :class:`ServingMetrics`.
+
+The primary clock is pluggable: ``clock=None`` (iteration-counted,
+default), a callable like ``time.monotonic`` (wall seconds), or the
+string ``"modeled"`` — each step then advances by the engine's
+``last_step_modeled_s``, the closed-form chiplet-array seconds of the
+iteration's observed expert flow (``autotune.ServingCostModel``), so
+every latency metric is in machine-independent modeled seconds.
+Independently of the primary clock, a **secondary modeled clock**
+(``modeled_now``) always integrates the same quantity, and every
+ticket carries modeled-time stamps — ``ServingMetrics`` therefore
+always reports ``ttft_modeled`` / ``tpot_modeled`` /
+``queue_delay_modeled`` / ``elapsed_modeled`` alongside the primary
+metrics (see docs/benchmarks.md for how the serving benchmark gates on
+these).
 """
 from __future__ import annotations
 
@@ -71,6 +85,12 @@ class Ticket:
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
     tokens: List[int] = field(default_factory=list)
+    # the same lifecycle on the secondary modeled clock (chiplet-array
+    # seconds integrated from the engine's per-iteration cost model)
+    arrival_m: float = 0.0
+    admitted_m: Optional[float] = None
+    first_token_m: Optional[float] = None
+    finished_m: Optional[float] = None
 
     @property
     def done(self) -> bool:
@@ -95,10 +115,20 @@ class ServingMetrics:
     tokens_emitted: int
     elapsed: float
     iterations: int
+    # secondary modeled clock (machine-independent chiplet-array
+    # seconds) — always present when the engine has a cost model
+    ttft_modeled: Dict[str, float] = field(default_factory=dict)
+    tpot_modeled: Dict[str, float] = field(default_factory=dict)
+    queue_delay_modeled: Dict[str, float] = field(default_factory=dict)
+    elapsed_modeled: float = 0.0
 
     @property
     def throughput(self) -> float:
         return self.tokens_emitted / max(self.elapsed, 1e-12)
+
+    @property
+    def throughput_modeled(self) -> float:
+        return self.tokens_emitted / max(self.elapsed_modeled, 1e-12)
 
     def to_dict(self) -> dict:
         return {
@@ -108,6 +138,11 @@ class ServingMetrics:
             "tokens_emitted": self.tokens_emitted,
             "elapsed": self.elapsed, "iterations": self.iterations,
             "throughput": self.throughput,
+            "ttft_modeled": self.ttft_modeled,
+            "tpot_modeled": self.tpot_modeled,
+            "queue_delay_modeled": self.queue_delay_modeled,
+            "elapsed_modeled": self.elapsed_modeled,
+            "throughput_modeled": self.throughput_modeled,
         }
 
 
@@ -122,9 +157,16 @@ class Scheduler:
         self.on_token = on_token
         # None -> iteration-counted metric clock (deterministic; each
         # step advances by dt).  A callable (e.g. time.monotonic) makes
-        # every metric wall-clocked instead.
+        # every metric wall-clocked; "modeled" advances by the engine's
+        # last_step_modeled_s (machine-independent modeled seconds).
+        if isinstance(clock, str) and clock != "modeled":
+            raise ValueError(f"unknown clock {clock!r} "
+                             f"(want None, a callable, or 'modeled')")
         self.clock = clock
-        self._t0 = clock() if clock is not None else 0.0
+        self._t0 = clock() if callable(clock) else 0.0
+        # secondary modeled clock: always integrates the engine's
+        # per-iteration modeled seconds, whatever the primary clock
+        self.modeled_now = 0.0
         self.queue: Deque[Ticket] = deque()
         self.tickets: Dict[str, Ticket] = {}        # by scheduler rid
         self._by_engine: Dict[str, Ticket] = {}     # engine rid -> ticket
@@ -157,7 +199,8 @@ class Scheduler:
                    max_new=max_new,
                    arrival=self.now if arrival is None else min(arrival,
                                                                 self.now),
-                   arrival_iter=self.iteration)
+                   arrival_iter=self.iteration,
+                   arrival_m=self.modeled_now)
         self.queue.append(t)
         self.tickets[t.rid] = t
         return t.rid
@@ -190,6 +233,7 @@ class Scheduler:
             t.engine_rid = self.engine.submit_chunked(t.prompt, t.max_new)
             t.admitted_at = self.now
             t.admitted_iter = self.iteration
+            t.admitted_m = self.modeled_now
             self._by_engine[t.engine_rid] = t
             admitted.append(t.rid)
         return admitted
@@ -208,8 +252,15 @@ class Scheduler:
         self.iteration += 1
         self.admit_ready()
         events = self.engine.step()
-        if self.clock is not None:
+        adv = getattr(self.engine, "last_step_modeled_s", 0.0)
+        self.modeled_now += adv
+        if callable(self.clock):
             self.now = self.clock() - self._t0
+        elif self.clock == "modeled":
+            # fall back to dt for iterations the model cannot see (no
+            # MoE work, e.g. a pure-attention span) so the clock — and
+            # the traffic loop feeding it — always advances
+            self.now += adv if adv > 0 else dt
         else:
             self.now += dt
         out: List[Tuple[str, int]] = []
@@ -219,6 +270,7 @@ class Scheduler:
                 continue                      # directly-submitted request
             if t.first_token_at is None:
                 t.first_token_at = self.now
+                t.first_token_m = self.modeled_now
             t.tokens.append(tok)
             out.append((t.rid, tok))
             if self.on_token is not None:
@@ -230,6 +282,7 @@ class Scheduler:
             st = self.engine.requests.get(erid)
             if st is not None and st.done and not t.done:
                 t.finished_at = self.now
+                t.finished_m = self.modeled_now
                 del self._by_engine[erid]
         return out
 
@@ -264,9 +317,19 @@ class Scheduler:
         tpot = [(t.finished_at - t.first_token_at) / (len(t.tokens) - 1)
                 for t in done
                 if t.first_token_at is not None and len(t.tokens) > 1]
+        ttft_m = [t.first_token_m - t.arrival_m for t in done
+                  if t.first_token_m is not None]
+        qdel_m = [t.admitted_m - t.arrival_m for t in done
+                  if t.admitted_m is not None]
+        tpot_m = [(t.finished_m - t.first_token_m) / (len(t.tokens) - 1)
+                  for t in done
+                  if t.first_token_m is not None and len(t.tokens) > 1]
         return ServingMetrics(
             ttft=percentiles(ttft), tpot=percentiles(tpot),
             queue_delay=percentiles(qdel), completed=len(done),
             rejected=self.rejected,
             tokens_emitted=sum(len(t.tokens) for t in self.tickets.values()),
-            elapsed=self.now, iterations=self.iteration)
+            elapsed=self.now, iterations=self.iteration,
+            ttft_modeled=percentiles(ttft_m), tpot_modeled=percentiles(tpot_m),
+            queue_delay_modeled=percentiles(qdel_m),
+            elapsed_modeled=self.modeled_now)

@@ -109,8 +109,8 @@ def run_closed_loop(scheduler, traffic: List[TrafficRequest], *,
 
     Arrival times are interpreted on the scheduler's clock (iteration
     counts advancing by ``dt`` per step unless the scheduler was built
-    with a wall clock): every request whose arrival time has passed is
-    offered before the next step.  Returns ``{"metrics": ServingMetrics,
+    with a wall clock or ``clock="modeled"``): every request whose
+    arrival time has passed is offered before the next step.  Returns ``{"metrics": ServingMetrics,
     "outputs": {rid: tokens}, "dropped": [rid, ...]}`` — dropped
     requests hit the bounded queue.
     """
@@ -130,7 +130,7 @@ def run_closed_loop(scheduler, traffic: List[TrafficRequest], *,
             i += 1
         if i >= len(todo) and not scheduler.pending():
             break
-        if not scheduler.pending() and scheduler.clock is not None:
+        if not scheduler.pending() and callable(scheduler.clock):
             # wall-clocked and idle before the next arrival: sleep the
             # gap out (bounded slices so the loop stays responsive)
             # instead of burning engine iterations — idle waits do not
@@ -138,6 +138,12 @@ def run_closed_loop(scheduler, traffic: List[TrafficRequest], *,
             time.sleep(min(0.05, max(1e-4,
                                      todo[i].arrival - scheduler.now)))
             scheduler.now = scheduler.clock() - scheduler._t0
+            continue
+        if not scheduler.pending() and scheduler.clock == "modeled":
+            # modeled-clocked and idle: the modeled clock only advances
+            # with engine compute, so event-skip straight to the next
+            # arrival instead of spinning empty iterations
+            scheduler.now = max(scheduler.now, todo[i].arrival)
             continue
         scheduler.step(dt=dt)
         iters += 1

@@ -253,6 +253,37 @@ def simulate_trajectory(hw: HardwareConfig, spec: ModelSpec, counts, *,
     return comp_done
 
 
+def replay_trace(hw: HardwareConfig, spec: ModelSpec, trace, *,
+                 capacity_factor: float = 1.25) -> float:
+    """Total modeled seconds of a serving-engine workload trace, replayed
+    record by record through :func:`simulate_trajectory` — the discrete
+    event-loop referee of the engine's closed-form per-record clock
+    (``autotune.ServingCostModel`` / the ``modeled_s`` field, see
+    docs/trace-format.md and docs/benchmarks.md).
+
+    Each record is one MoE layer's observed expert counts for one
+    iteration.  Dynamic-schedule records replay along their recorded EMA
+    trajectory (falling back to the record's paired-load ``order``);
+    static records replay the shape-only capacity-padded plan.  Records
+    with no routed tokens are skipped (no expert flow, no step time).
+    """
+    total = 0.0
+    for rec in trace:
+        counts = np.asarray(rec["counts"], np.float64)
+        if counts.sum() <= 0:
+            continue
+        if rec.get("schedule") == "dynamic":
+            order = rec.get("trajectory")
+            if order is None:
+                order = rec["order"]
+            total += simulate_trajectory(hw, spec, counts, order=order,
+                                         capacity_factor=capacity_factor)
+        else:
+            total += simulate_trajectory(hw, spec, counts, padded=True,
+                                         capacity_factor=capacity_factor)
+    return total
+
+
 def schedule_step_times(hw: HardwareConfig, spec: ModelSpec, counts, *,
                         capacity_factor: float = 1.25) -> Dict[str, float]:
     """Static-vs-dynamic trajectory step times for one observed gating.

@@ -1,0 +1,111 @@
+"""Docs health: relative-link integrity and doctested examples.
+
+Two guarantees, both cheap enough for the fast CI job:
+
+* every relative markdown link in ``docs/*.md`` and ``README.md``
+  resolves to a real file in the repo (external http(s) links and pure
+  anchors are skipped), and the README links all four docs pages;
+* every fenced ```python block in ``docs/execution-spec.md`` runs as a
+  doctest, with the repo root as cwd so the
+  ``ExecutionSpec.load("examples/moe-spec.json")`` example resolves.
+"""
+from __future__ import annotations
+
+import doctest
+import os
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+DOCS = REPO / "docs"
+
+DOC_PAGES = [
+    "architecture.md",
+    "trace-format.md",
+    "execution-spec.md",
+    "benchmarks.md",
+]
+
+# [text](target) — excludes images (![...]) via the lookbehind; target is
+# taken up to the first closing paren (no nested-paren targets in our docs).
+_LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)#][^)]*)\)")
+
+
+def _markdown_files():
+    files = [REPO / "README.md"]
+    files.extend(sorted(DOCS.glob("*.md")))
+    return files
+
+
+def _relative_links(md: Path):
+    """Yield (link, resolved_target) for each relative link in *md*."""
+    for link in _LINK_RE.findall(md.read_text()):
+        if link.startswith(("http://", "https://", "mailto:")):
+            continue
+        target = link.split("#", 1)[0]
+        if not target:
+            continue
+        yield link, (md.parent / target).resolve()
+
+
+def test_docs_pages_exist():
+    for page in DOC_PAGES:
+        assert (DOCS / page).is_file(), f"missing docs page: docs/{page}"
+
+
+@pytest.mark.parametrize("md", _markdown_files(), ids=lambda p: p.name)
+def test_relative_links_resolve(md):
+    broken = [link for link, path in _relative_links(md) if not path.exists()]
+    assert not broken, f"{md.relative_to(REPO)} has broken links: {broken}"
+
+
+def test_readme_links_every_docs_page():
+    linked = {path for _, path in _relative_links(REPO / "README.md")}
+    missing = [p for p in DOC_PAGES if (DOCS / p).resolve() not in linked]
+    assert not missing, f"README.md does not link docs pages: {missing}"
+
+
+def test_docs_cross_link_each_other_and_readme():
+    readme = (REPO / "README.md").resolve()
+    for page in DOC_PAGES:
+        linked = {path for _, path in _relative_links(DOCS / page)}
+        assert readme in linked, f"docs/{page} does not link back to README"
+
+
+_FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def _doctest_blocks(md: Path):
+    return _FENCE_RE.findall(md.read_text())
+
+
+def test_execution_spec_examples_are_doctests():
+    """Run every fenced ```python block of docs/execution-spec.md as a
+    doctest, sharing one namespace across blocks (later blocks reuse
+    ``spec``/imports from earlier ones), with cwd = repo root so the
+    ``examples/moe-spec.json`` load resolves."""
+    blocks = _doctest_blocks(DOCS / "execution-spec.md")
+    assert blocks, "docs/execution-spec.md has no fenced python examples"
+
+    parser = doctest.DocTestParser()
+    runner = doctest.DocTestRunner(
+        optionflags=doctest.ELLIPSIS | doctest.IGNORE_EXCEPTION_DETAIL
+    )
+    globs: dict = {}
+    cwd = os.getcwd()
+    os.chdir(REPO)
+    try:
+        for i, block in enumerate(blocks):
+            test = parser.get_doctest(
+                block, globs, f"execution-spec.md[block {i}]", None, None
+            )
+            runner.run(test, clear_globs=False)
+            globs = test.globs  # carry state forward
+    finally:
+        os.chdir(cwd)
+    assert runner.failures == 0, (
+        f"{runner.failures} doctest failure(s) in docs/execution-spec.md "
+        "(run pytest -s to see the diffs)"
+    )

@@ -129,10 +129,16 @@ def test_mixed_length_prompts(setup):
 def test_engine_routes_each_moe_layer_once(setup, monkeypatch):
     """The engine's gate pass IS the route stage: one gating.route call
     per MoE layer per iteration, threaded into both deferral and expert
-    execution (no re-route inside moe_block)."""
+    execution (no re-route inside moe_block).
+
+    Pinned to the eager path: on the fused path gating.route only runs
+    at trace time inside a cached compiled segment, so monkeypatch
+    counting can't see it — tests/test_megastep.py has the fused
+    structural counterpart."""
     from repro.core import gating
     cfg, params = setup
-    eng = Engine(params, cfg, ServeConfig(max_batch=2, max_ctx=32))
+    eng = Engine(params, cfg, ServeConfig(max_batch=2, max_ctx=32,
+                                          fused=False))
     eng.submit([1, 2, 3], max_new=4)
 
     calls = []
