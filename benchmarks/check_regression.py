@@ -23,8 +23,11 @@ Compares ``artifacts/bench/*.json`` (produced by this run's
   iteration-counted latency percentiles and exact token/completion
   counts, plus the modeled chiplet-array-seconds percentiles and their
   agreement ratio against the ``sim.modes.replay_trace`` referee
-  (within 5%).  The wall-clock block is informational, never gated
-  (see docs/benchmarks.md).
+  (within 5%).  The ``prefix_mix`` block gates prefix caching: outputs
+  must stay bit-identical to the pool-off run, and the prefill-compute
+  savings must clear the 40% floor without regressing against the
+  baseline.  The wall-clock and state-pool blocks are informational,
+  never gated (see docs/benchmarks.md).
 
 Usage:
   PYTHONPATH=src python benchmarks/check_regression.py \
@@ -247,6 +250,50 @@ def check_serving(base, cur, tol, failures):
           f"(baseline {(base.get('ttft_iters') or {}).get('p50')}), "
           f"modeled ttft p50={(cm.get('ttft_s') or {}).get('p50')}s, "
           f"referee_ratio={cm.get('referee_ratio')}")
+    check_prefix_mix(base, cur, failures)
+
+
+# the acceptance floor for prefix caching on the shared-prefix mix: the
+# cached run must spend at least 40% fewer prefill compute tokens
+PREFIX_SAVINGS_FLOOR = 0.40
+
+
+def check_prefix_mix(base, cur, failures):
+    """Shared-prefix-mix gate (deterministic: same workload + seed):
+    prefix caching must keep outputs bit-identical to the pool-off run,
+    clear the 40% prefill-compute-savings floor, and neither the
+    savings fraction nor the cache-hit rate may regress against the
+    committed baseline."""
+    bp, cp = base.get("prefix_mix") or {}, cur.get("prefix_mix") or {}
+    if bp and not cp:
+        failures.append("BENCH_serving.prefix_mix: block disappeared — the "
+                        "prefix-caching run is gated")
+        return
+    if not cp:
+        return
+    if not cp.get("outputs_match_pool_off"):
+        failures.append("BENCH_serving.prefix_mix: cached outputs diverged "
+                        "from the pool-off run — prefix caching broke "
+                        "bit-identity")
+    sav = cp.get("savings_frac", 0.0)
+    if sav < PREFIX_SAVINGS_FLOOR:
+        failures.append(f"BENCH_serving.prefix_mix: savings_frac {sav:.2f} "
+                        f"< floor {PREFIX_SAVINGS_FLOOR} — shared prefixes "
+                        f"are being recomputed")
+    if bp.get("workload") == cp.get("workload"):
+        for col in ("savings_frac", "cache_hit_rate"):
+            bv, cv = bp.get(col), cp.get(col)
+            if bv is not None and cv is not None and cv < bv - 1e-9:
+                failures.append(f"BENCH_serving.prefix_mix.{col}: "
+                                f"{bv:.3f} -> {cv:.3f} (regressed)")
+    elif bp:
+        failures.append(f"BENCH_serving.prefix_mix: workload changed "
+                        f"{bp.get('workload')} -> {cp.get('workload')} — "
+                        f"refresh benchmarks/baselines/ if intentional")
+    print(f"BENCH_serving.prefix_mix: savings_frac={sav:.3f} "
+          f"(baseline {bp.get('savings_frac')}), hit_rate="
+          f"{cp.get('cache_hit_rate')}, outputs_match="
+          f"{cp.get('outputs_match_pool_off')}")
 
 
 def main(argv=None):

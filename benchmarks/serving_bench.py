@@ -20,6 +20,13 @@ Emits ``artifacts/bench/BENCH_serving.json`` with three metric classes
 * **informational wall clock** — machine-dependent; recorded so a human
   can eyeball a local slowdown, never gated and never a baseline.
 
+A second closed loop runs the ``zipf_prefix`` traffic mix (Zipf-shared
+system prompts) twice — prefix caching off, then on — and gates the
+**prefix_mix** block: cached-run outputs must match the uncached run
+token-for-token, and the prefill-compute savings fraction must stay
+over the 40% floor and never regress against the baseline.  Pool
+accounting (peak pages, resident bytes) rides along informationally.
+
 Usage:  PYTHONPATH=src python benchmarks/serving_bench.py [--quick]
 """
 from __future__ import annotations
@@ -95,6 +102,52 @@ def run(quick: bool = False) -> dict:
             "wall_s": wall_s,
             "throughput_tok_s": m.tokens_emitted / max(wall_s, 1e-9),
         },
+        # state-pool accounting for the Poisson run — informational
+        "state_pool_informational": {
+            "note": "paged-pool footprint; shapes may change, not gated",
+            "pool_pages": eng.stats["pool_pages"],
+            "peak_pages": eng.stats["pool_peak_pages"],
+            "peak_resident_state_bytes":
+                eng.stats["peak_resident_state_bytes"],
+        },
+    }
+
+    # ------------------------------------------------------------------
+    # shared-prefix mix: prefix caching off vs on (gated)
+    # ------------------------------------------------------------------
+    pcfg = TrafficConfig(num_requests=n_req, rate=0.8, avg_prompt=10,
+                         max_prompt=24, min_new=2, max_new=5,
+                         vocab=cfg.vocab_size, seed=0,
+                         mix="poisson+zipf_prefix", num_prefixes=2,
+                         prefix_len=12)
+    ptraffic = make_traffic(pcfg)
+
+    def prefix_run(prefix_cache: bool):
+        e = Engine(params, cfg, ServeConfig(
+            max_batch=4, max_ctx=32, chunk_tokens=4, spec="capacity",
+            prefix_cache=prefix_cache))
+        s = Scheduler(e, SchedulerConfig(queue_capacity=64, policy="fcfs"))
+        r = run_closed_loop(s, ptraffic)
+        return e, r
+
+    eng_off, res_off = prefix_run(False)
+    eng_on, res_on = prefix_run(True)
+    base_tokens = eng_off.stats["prefill_tokens"]
+    out["prefix_mix"] = {
+        "workload": {"requests": n_req, "mix": pcfg.mix,
+                     "num_prefixes": pcfg.num_prefixes,
+                     "prefix_len": pcfg.prefix_len, "seed": pcfg.seed},
+        "prefill_tokens_off": base_tokens,
+        "prefill_tokens_on": eng_on.stats["prefill_tokens"],
+        "savings_frac": (base_tokens - eng_on.stats["prefill_tokens"])
+        / max(base_tokens, 1),
+        "cache_hits": eng_on.stats["cache_hits"],
+        "cache_misses": eng_on.stats["cache_misses"],
+        "cache_hit_rate": eng_on.stats["cache_hits"]
+        / max(eng_on.stats["cache_hits"] + eng_on.stats["cache_misses"], 1),
+        "tokens_emitted": res_on["metrics"].tokens_emitted,
+        # bit-identity: cached admission must not change a single token
+        "outputs_match_pool_off": res_on["outputs"] == res_off["outputs"],
     }
     return out
 

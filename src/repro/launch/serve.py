@@ -16,6 +16,11 @@ queue-delay p50/p95/p99 plus throughput:
       --chunk-tokens 8
 
 ``--traffic --dry-run`` runs a tiny deterministic closed loop (CI smoke).
+State lives in the paged pool (``--page-size``); ``--prefix-cache``
+turns on content-hashed prompt-prefix reuse, ``--preempt-depth`` lets
+the scheduler evict/restore requests under queue pressure, and
+``--traffic-mix`` shapes the stream (``zipf_prefix`` shared system
+prompts, ``diurnal`` arrival bursts).
 
 MoE execution is configured by a single :class:`ExecutionSpec`
 (``repro.core.strategy``): ``--strategy`` names a registered strategy
@@ -89,12 +94,28 @@ def main():
     ap.add_argument("--traffic-requests", type=int, default=32)
     ap.add_argument("--traffic-rate", type=float, default=0.5,
                     help="mean Poisson arrivals per second (wall clock)")
+    ap.add_argument("--traffic-mix", default="poisson",
+                    help="traffic mix: 'poisson' plus '+'-separated "
+                         "modifiers 'zipf_prefix' (Zipf-shared system "
+                         "prompts) and 'diurnal' (arrival-rate bursts), "
+                         "e.g. poisson+zipf_prefix+diurnal")
     ap.add_argument("--avg-prompt", type=int, default=12)
     ap.add_argument("--chunk-tokens", type=int, default=8,
                     help="prefill chunk size piggybacked per iteration")
     ap.add_argument("--queue-capacity", type=int, default=64)
     ap.add_argument("--queue-policy", choices=("fcfs", "spf"),
                     default="fcfs")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per physical KV page in the state pool "
+                         "(repro.serving.statepool)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-hash prompt prefixes and admit shared "
+                         "prefixes with near-zero prefill compute")
+    ap.add_argument("--preempt-depth", type=int, default=None,
+                    help="queue depth past which the scheduler preempts "
+                         "one running request per step to the state pool "
+                         "(default: never preempt; 0 forces preemption "
+                         "whenever the queue is non-empty and full)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -120,20 +141,23 @@ def main():
     if args.traffic:
         from repro.serving import (Scheduler, SchedulerConfig, TrafficConfig,
                                    make_traffic, run_closed_loop)
-        n_req = 4 if args.dry_run else args.traffic_requests
+        n_req = (args.traffic_requests if args.traffic_requests != 32
+                 else 4) if args.dry_run else args.traffic_requests
         max_prompt = max(2, min(args.avg_prompt * 2,
                                 args.prompt_len + args.avg_prompt))
         tcfg = TrafficConfig(num_requests=n_req, rate=args.traffic_rate,
                              avg_prompt=args.avg_prompt,
                              max_prompt=max_prompt, min_new=2,
                              max_new=args.max_new, vocab=cfg.vocab_size,
-                             seed=args.seed)
+                             seed=args.seed, mix=args.traffic_mix)
         traffic = make_traffic(tcfg)
         need_ctx = max_prompt + args.max_new + 1
         eng = Engine(params, cfg, ServeConfig(
             max_batch=args.max_batch, max_ctx=need_ctx,
             buffering_slack=args.slack, theta_min=args.theta_min,
-            chunk_tokens=args.chunk_tokens, spec=spec, seed=args.seed))
+            chunk_tokens=args.chunk_tokens, spec=spec, seed=args.seed,
+            page_size=args.page_size, prefix_cache=args.prefix_cache,
+            preempt_queue_depth=args.preempt_depth))
         clock = None if args.dry_run else time.monotonic
         sched = Scheduler(eng, SchedulerConfig(
             queue_capacity=args.queue_capacity, policy=args.queue_policy),
@@ -154,6 +178,19 @@ def main():
               f"({m.tokens_emitted} tokens, "
               f"{eng.stats['prefill_chunks']} prefill chunks, "
               f"{eng.stats['deferrals']} deferrals)")
+        s = eng.stats
+        print(f"  state pool   peak {s['pool_peak_pages']}/"
+              f"{s['pool_pages']} pages, "
+              f"{s['peak_resident_state_bytes']} peak resident bytes, "
+              f"{s['cache_hits']} cache hits / {s['cache_misses']} misses "
+              f"({s['prefill_tokens_saved']} prefill tokens saved), "
+              f"{s['preemptions']} preemptions / {s['restores']} restores")
+        if args.dry_run and args.preempt_depth is not None \
+                and s["preemptions"] < 1:
+            raise SystemExit("preemption smoke: --preempt-depth was set "
+                             "but no request was ever preempted — queue "
+                             "pressure never materialized (check "
+                             "--traffic-requests vs --max-batch)")
         if args.dry_run:
             print("traffic dry-run OK")
         return

@@ -103,7 +103,8 @@ def prefill_fn(params, batch, cfg: ModelConfig, max_seq: int, *, spec=None):
 
 
 def prefill_chunk_fn(params, tokens, caches, cache_len, cfg: ModelConfig, *,
-                     spec=None, token_mask=None, return_hidden=False):
+                     spec=None, token_mask=None, return_hidden=False,
+                     page_table=None):
     """Append a K-token prompt chunk to existing decode caches.
 
     The continuous-batching engine's admission path: prompts are
@@ -117,7 +118,8 @@ def prefill_chunk_fn(params, tokens, caches, cache_len, cfg: ModelConfig, *,
         raise NotImplementedError("chunked prefill serves LM-family models")
     return transformer.prefill_chunk(params, tokens, caches, cache_len, cfg,
                                      spec=spec, token_mask=token_mask,
-                                     return_hidden=return_hidden)
+                                     return_hidden=return_hidden,
+                                     page_table=page_table)
 
 
 # ---------------------------------------------------------------------------

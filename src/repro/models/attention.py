@@ -243,6 +243,100 @@ def attention_append(params, x, cache: KVCache, cache_len, *,
     return out.reshape(B, K, n_heads * head_dim) @ params["wo"], KVCache(k, v)
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache (serving state pool)
+# ---------------------------------------------------------------------------
+#
+# The serving engine stores attention KV in fixed-size pages owned by a
+# pool (``repro.serving.statepool``) instead of one dense max_ctx slab
+# per slot: ``pages.k/v`` are (P, page_size, n_kv, hd) physical pages and
+# ``page_table`` (B, NP) maps each slot's logical page index to a
+# physical page.  The paged variants below gather the table into a dense
+# per-slot view, run the *same* dense attention math (so paged and dense
+# agree bitwise on equal values), and scatter only the newly written
+# positions back — shared pages (prefix-cache hits) are never written,
+# because writes only land at positions >= the shared prefix length and
+# partial tail pages are copy-on-write at attach time.
+
+
+def init_paged_kv_cache(num_pages, page_size, n_kv, head_dim, dtype):
+    z = jnp.zeros((num_pages, page_size, n_kv, head_dim), dtype)
+    return KVCache(z, z)
+
+
+def gather_pages(pages: KVCache, page_table) -> KVCache:
+    """Dense per-slot view (B, NP*page_size, n_kv, hd) of the paged pool.
+
+    Pure gather: positions beyond a slot's cache_len read whatever the
+    physical page holds, exactly like the dense cache's unwritten tail —
+    both are masked out of the softmax by the validity mask."""
+    ps = pages.k.shape[1]
+    B, NP = page_table.shape
+
+    def dense(a):
+        return a[page_table].reshape(B, NP * ps, *a.shape[2:])
+
+    return KVCache(dense(pages.k), dense(pages.v))
+
+
+def attention_decode_paged(params, x, pages: KVCache, page_table, cache_len,
+                           *, n_heads, n_kv, head_dim, rope_theta, row_mask):
+    """Single-token decode against the paged pool.
+
+    Same math as :func:`attention_decode` on the gathered dense view;
+    the new token's K/V is then scattered into the slot's tail page at
+    ``(page_table[b, pos // ps], pos % ps)``.  ``row_mask`` (B,) marks
+    rows that actually advance: masked rows are steered to the
+    out-of-range offset ``ps`` and dropped, so an idle slot's (possibly
+    stale) table row is never written through."""
+    B = x.shape[0]
+    ps = pages.k.shape[1]
+    S = page_table.shape[1] * ps
+    dense = gather_pages(pages, page_table)
+    out, nd = attention_decode(params, x, dense, cache_len,
+                               n_heads=n_heads, n_kv=n_kv, head_dim=head_dim,
+                               rope_theta=rope_theta, update_cache=True)
+    rows = jnp.arange(B)
+    idx = jnp.minimum(cache_len, S - 1)                     # (B,)
+    k_new = nd.k[rows, idx]                                 # (B, n_kv, hd)
+    v_new = nd.v[rows, idx]
+    phys = page_table[rows, idx // ps]                      # (B,)
+    off = jnp.where(jnp.asarray(row_mask), idx % ps, ps)    # masked -> drop
+    k = pages.k.at[phys, off].set(k_new.astype(pages.k.dtype), mode="drop")
+    v = pages.v.at[phys, off].set(v_new.astype(pages.v.dtype), mode="drop")
+    return out, KVCache(k, v)
+
+
+def attention_append_paged(params, x, pages: KVCache, page_table, cache_len,
+                           *, n_heads, n_kv, head_dim, rope_theta,
+                           token_mask=None):
+    """Chunked-prefill append against the paged pool.
+
+    Same math as :func:`attention_append` on the gathered dense view;
+    each valid chunk position ``pos = cache_len + i`` is scattered into
+    ``(page_table[b, pos // ps], pos % ps)``; masked positions drop."""
+    B, K, _ = x.shape
+    ps = pages.k.shape[1]
+    NP = page_table.shape[1]
+    S = NP * ps
+    if token_mask is None:
+        token_mask = jnp.ones((B, K), bool)
+    dense = gather_pages(pages, page_table)
+    out, nd = attention_append(params, x, dense, cache_len,
+                               n_heads=n_heads, n_kv=n_kv, head_dim=head_dim,
+                               rope_theta=rope_theta, token_mask=token_mask)
+    rows = jnp.arange(B)[:, None]
+    pos = cache_len[:, None] + jnp.arange(K)[None, :]       # (B,K)
+    safe = jnp.minimum(pos, S - 1)
+    k_new = nd.k[rows, safe]                                # (B,K,n_kv,hd)
+    v_new = nd.v[rows, safe]
+    phys = page_table[rows, safe // ps]                     # (B,K)
+    off = jnp.where(token_mask, pos % ps, ps)               # masked -> drop
+    k = pages.k.at[phys, off].set(k_new.astype(pages.k.dtype), mode="drop")
+    v = pages.v.at[phys, off].set(v_new.astype(pages.v.dtype), mode="drop")
+    return out, KVCache(k, v)
+
+
 def prefill_kv(params, x, *, n_kv, head_dim, rope_theta, positions=None):
     """Compute the cache entries for a full prompt (used by prefill_step)."""
     B, S, _ = x.shape

@@ -312,6 +312,29 @@ def mamba2_decode(params, x, state: SSMState, ssm: SSMConfig, d_model):
     return y[:, None], SSMState(new_conv, new_ssd)
 
 
+def ssm_state_slice(state: SSMState, row) -> SSMState:
+    """Value snapshot of one batch row of a period-stacked state.
+
+    ``state`` arrays are (n_periods, B, ...) — the serving layout from
+    ``transformer.init_caches``; the snapshot drops the batch axis.
+    Exact: plain slices, no arithmetic, so snapshot -> restore is
+    bit-identical (the state-pool preemption/prefix-cache guarantee)."""
+    return SSMState(state.conv[:, row], state.ssd[:, row])
+
+
+def ssm_state_restore(state: SSMState, snap: SSMState, row) -> SSMState:
+    """Write a :func:`ssm_state_slice` snapshot back into batch ``row``."""
+    return SSMState(state.conv.at[:, row].set(snap.conv.astype(state.conv.dtype)),
+                    state.ssd.at[:, row].set(snap.ssd.astype(state.ssd.dtype)))
+
+
+def ssm_state_zero_row(state: SSMState, row) -> SSMState:
+    """Reset one batch row to the initial (zero) state — fresh-admission
+    hygiene for recycled engine slots."""
+    return SSMState(state.conv.at[:, row].set(jnp.zeros_like(state.conv[:, row])),
+                    state.ssd.at[:, row].set(jnp.zeros_like(state.ssd[:, row])))
+
+
 def init_ssm_state(batch, d_model, ssm: SSMConfig, dtype):
     di = ssm.expand * d_model
     nh = di // ssm.head_dim

@@ -260,6 +260,34 @@ def init_caches(cfg: ModelConfig, batch: int, max_seq: int):
     return tuple(caches)
 
 
+def init_paged_caches(cfg: ModelConfig, batch: int, num_pages: int,
+                      page_size: int):
+    """Stacked per-period caches with attention KV in pool pages.
+
+    Attention slots hold (n_periods, num_pages, page_size, n_kv, hd)
+    physical pages shared by every serving slot through one page table
+    (``repro.serving.statepool``); SSM slots keep dense per-row state —
+    it is O(1) per slot, so the pool snapshots it by value instead of
+    paging it.  Page allocation is in lockstep across layers, so a
+    single (B, NP) table indexes every layer's pages."""
+    p, plan = period_plan(cfg)
+    n_periods = cfg.num_layers // p
+    dtype = jnp.dtype(cfg.dtype)
+    caches = []
+    for mixer, _ in plan:
+        if mixer == "attn":
+            kv = attn_mod.init_paged_kv_cache(num_pages, page_size,
+                                              cfg.num_kv_heads,
+                                              cfg.resolved_head_dim, dtype)
+            kv = jax.tree.map(lambda a: jnp.broadcast_to(a, (n_periods,) + a.shape), kv)
+            caches.append(SlotCache(kv, ()))
+        else:
+            st = ssm_mod.init_ssm_state(batch, cfg.d_model, cfg.ssm, dtype)
+            st = jax.tree.map(lambda a: jnp.broadcast_to(a, (n_periods,) + a.shape), st)
+            caches.append(SlotCache((), st))
+    return tuple(caches)
+
+
 def prefill(params, tokens, cfg: ModelConfig, max_seq: int, *,
             prefix_embeds=None, spec=None):
     """Run the prompt, returning (logits, caches filled up to S)."""
@@ -324,7 +352,8 @@ def prefill(params, tokens, cfg: ModelConfig, max_seq: int, *,
 
 
 def prefill_chunk(params, tokens, caches, cache_len, cfg: ModelConfig, *,
-                  spec=None, token_mask=None, return_hidden=False):
+                  spec=None, token_mask=None, return_hidden=False,
+                  page_table=None):
     """Append a K-token prompt chunk to existing decode caches.
 
     The chunked-prefill entry point for continuous-batching serving:
@@ -367,11 +396,20 @@ def prefill_chunk(params, tokens, caches, cache_len, cfg: ModelConfig, *,
         for s, (mixer, ffn_kind) in enumerate(plan):
             h = apply_norm(cfg.norm, period_params[s]["norm1"], x)
             if mixer == "attn":
-                h, kv = attn_mod.attention_append(
-                    period_params[s]["attn"], h, period_caches[s].kv,
-                    cache_len, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
-                    head_dim=cfg.resolved_head_dim,
-                    rope_theta=cfg.rope_theta, token_mask=token_mask)
+                if page_table is not None:
+                    h, kv = attn_mod.attention_append_paged(
+                        period_params[s]["attn"], h, period_caches[s].kv,
+                        page_table, cache_len, n_heads=cfg.num_heads,
+                        n_kv=cfg.num_kv_heads,
+                        head_dim=cfg.resolved_head_dim,
+                        rope_theta=cfg.rope_theta, token_mask=token_mask)
+                else:
+                    h, kv = attn_mod.attention_append(
+                        period_params[s]["attn"], h, period_caches[s].kv,
+                        cache_len, n_heads=cfg.num_heads,
+                        n_kv=cfg.num_kv_heads,
+                        head_dim=cfg.resolved_head_dim,
+                        rope_theta=cfg.rope_theta, token_mask=token_mask)
                 new_caches.append(SlotCache(kv, period_caches[s].ssm))
             else:
                 h, st = ssm_mod.mamba2_chunk(
@@ -464,12 +502,15 @@ def decode_embed_merge(params, x, token_vec, start_mask, cfg: ModelConfig):
 
 
 def decode_mixer(params, x, caches, cache_len, cfg: ModelConfig,
-                 layer: int, mask):
+                 layer: int, mask, page_table=None):
     """Masked one-token mixer (attention / SSM) step for one layer.
 
     Only ``mask`` rows advance: their cache entry and residual stream
     update; everything else is bit-untouched.  Returns (x, caches) with
-    the full stacked cache tuple rebuilt functionally.
+    the full stacked cache tuple rebuilt functionally.  With a
+    ``page_table`` (B, NP), attention layers read/write through the
+    paged state pool (the scatter applies the row mask itself — masked
+    rows are dropped out of range, so the merge below is skipped).
     """
     p, plan = cached_period_plan(cfg)
     mixer, _ = plan[layer % p]
@@ -477,6 +518,18 @@ def decode_mixer(params, x, caches, cache_len, cfg: ModelConfig,
     slot = _layer_slot(params, layer, p)
     mask = jnp.asarray(mask)
     h = apply_norm(cfg.norm, slot["norm1"], x)
+    if mixer == "attn" and page_table is not None:
+        pages = jax.tree.map(lambda a: a[period_idx], caches[slot_i].kv)
+        h, new_pages = attn_mod.attention_decode_paged(
+            slot["attn"], h, pages, page_table, cache_len,
+            n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            row_mask=mask)
+        new_stack = jax.tree.map(lambda st, n: st.at[period_idx].set(n),
+                                 caches[slot_i].kv, new_pages)
+        caches = tuple(c if i != slot_i else SlotCache(new_stack, c.ssm)
+                       for i, c in enumerate(caches))
+        return jnp.where(mask[:, None, None], x + h, x), caches
     cache = jax.tree.map(lambda a: a[period_idx], caches[slot_i])
     if mixer == "attn":
         h, new_kv = attn_mod.attention_decode(
@@ -553,7 +606,7 @@ def decode_ffn(params, x, cfg: ModelConfig, layer: int, mask):
 
 
 def decode_span(params, x, caches, cache_len, cfg: ModelConfig,
-                lo: int, hi: int, mask):
+                lo: int, hi: int, mask, page_table=None):
     """Run the non-MoE layers ``[lo, hi)`` (mixer + dense FFN each) for
     the masked rows — the body of one mega-step segment between MoE
     boundaries (which must not contain an MoE layer)."""
@@ -562,7 +615,7 @@ def decode_span(params, x, caches, cache_len, cfg: ModelConfig,
         assert plan[layer % p][1] != "moe", \
             f"layer {layer} is an MoE boundary, not span interior"
         x, caches = decode_mixer(params, x, caches, cache_len, cfg,
-                                 layer, mask)
+                                 layer, mask, page_table=page_table)
         x = decode_ffn(params, x, cfg, layer, mask)
     return x, caches
 

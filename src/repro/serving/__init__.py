@@ -1,5 +1,7 @@
-from .engine import Engine, ServeConfig, RequestState
+from .engine import Engine, QueueFullError, RequestState, ServeConfig
 from .scheduler import (Scheduler, SchedulerConfig, ServingMetrics, Ticket,
                         percentiles)
+from .statepool import (PoolExhausted, PreemptedState, PrefixEntry,
+                        StatePool, hash_chain)
 from .traffic import (TrafficConfig, TrafficRequest, make_traffic,
                       run_closed_loop, to_sim_requests)

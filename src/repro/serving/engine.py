@@ -47,6 +47,16 @@ decisions, and are exported for the chiplet simulator to replay (the JAX
 engine and the cycle-level sim share one workload trace format — see
 docs/trace-format.md).
 
+Sequence state lives in the **paged state pool**
+(``repro.serving.statepool``): attention KV in fixed-size physical
+pages indexed per slot through one host page table (pushed to the
+device once per iteration, traced — never retraces), Mamba2 state dense
+per slot with by-value snapshots.  The pool underpins **prefix
+caching** (content-hashed prompt prefixes admit with near-zero compute,
+``ServeConfig.prefix_cache``) and **preemption**
+(:meth:`Engine.preempt` / :meth:`Engine.restore` — bit-identical
+eviction and resumption, driven by the scheduler under queue pressure).
+
 Every trace record also carries ``modeled_s`` — the closed-form
 chiplet-array seconds of that layer's observed expert flow
 (``autotune.ServingCostModel``); their per-iteration sum is surfaced as
@@ -70,7 +80,7 @@ from repro.configs.base import ModelConfig
 from repro.core import autotune, gating, trajectory
 from repro.core.policies import TokenBufferPolicy, paired_load_order
 from repro.models import api, transformer
-from repro.serving import megastep
+from repro.serving import megastep, statepool
 
 _ALIAS_WARNED: set = set()
 
@@ -93,6 +103,23 @@ class ServeConfig:
     theta_min: int = 2
     n_threshold: Optional[int] = None   # default derived from slack
     chunk_tokens: int = 16              # prefill chunk size (submit_chunked)
+    # paged state pool (repro.serving.statepool): attention KV lives in
+    # fixed-size physical pages indexed per slot through a host page
+    # table; Mamba2 state stays dense per slot and snapshots by value.
+    # pool_pages=None sizes the pool at twice the slot capacity, the
+    # headroom prefix entries and preemption handles live in.
+    page_size: int = 8
+    pool_pages: Optional[int] = None
+    # prefix caching: chunked-prefill state is content-hashed by the
+    # prompt-prefix chain; a later request sharing a cached prefix
+    # admits with the pages attached and only computes the suffix.
+    # Off by default — it changes stats["prefill_tokens"] accounting.
+    prefix_cache: bool = False
+    max_prefix_entries: int = 64
+    # preemption: when the scheduler's admission queue is deeper than
+    # this bound and no slot is free, one restorable request is evicted
+    # to the pool per step (None = never preempt)
+    preempt_queue_depth: Optional[int] = None
     # Serving must be batching-invariant: a request's tokens may not
     # depend on who shares the batch.  Capacity dispatch drops tokens
     # past C = ceil(T*k/E * capacity_factor) per expert, and *which*
@@ -131,6 +158,12 @@ class ServeConfig:
         elif sp.autotune is None:
             sp = replace(sp, autotune="analytic")
         self.spec = sp.validate()
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.preempt_queue_depth is not None \
+                and self.preempt_queue_depth < 0:
+            raise ValueError("preempt_queue_depth must be >= 0 (or None "
+                             "to disable preemption)")
 
 
 @dataclass
@@ -149,6 +182,16 @@ class RequestState:
     phase: str = "decode"
     prompt: List[int] = field(default_factory=list)   # pending prompt tokens
     prefill_pos: int = 0                              # tokens already cached
+    # prompt-prefix hash chain (statepool.hash_chain), computed once at
+    # chunked admission when ServeConfig.prefix_cache is on
+    prefix_keys: List[bytes] = field(default_factory=list)
+    preemptions: int = 0                # times evicted to the state pool
+
+
+class QueueFullError(RuntimeError):
+    """No free engine slot.  A RuntimeError subclass so pre-existing
+    ``except RuntimeError`` callers keep working; the continuous-batching
+    scheduler catches this *type* to requeue instead of crashing."""
 
 
 # deferral disabled when the activation threshold is effectively inf
@@ -168,7 +211,21 @@ class Engine:
         self.scfg = scfg
         self.p, self.plan = transformer.cached_period_plan(cfg)
         self.L = cfg.num_layers
-        self.caches = transformer.init_caches(cfg, scfg.max_batch, scfg.max_ctx)
+        pages_per_slot = -(-scfg.max_ctx // scfg.page_size)
+        num_pages = (scfg.pool_pages if scfg.pool_pages is not None
+                     else 2 * scfg.max_batch * pages_per_slot)
+        self.caches = transformer.init_paged_caches(
+            cfg, scfg.max_batch, num_pages, scfg.page_size)
+        page_b, ssm_b = statepool.state_bytes(self.caches)
+        # host-side page/refcount/prefix bookkeeping; device arrays stay
+        # owned by the engine (self.caches), the pool tells it what to do
+        self.pool = statepool.StatePool(
+            max_batch=scfg.max_batch, max_ctx=scfg.max_ctx,
+            page_size=scfg.page_size, num_pages=num_pages,
+            max_prefix_entries=scfg.max_prefix_entries,
+            bytes_per_page=page_b, ssm_bytes_per_row=ssm_b)
+        self._has_ssm = statepool.has_ssm(self.caches)
+        self._table_dev = jnp.asarray(self.pool.table)
         # host-side cache lengths: mutated in place (no device round-trip
         # per finished token), converted to a device array at call sites
         self.cache_len = np.zeros((scfg.max_batch,), np.int32)
@@ -190,7 +247,13 @@ class Engine:
                       "prefill_chunks": 0, "prefill_tokens": 0,
                       # device fetches on the fused path (boundary count
                       # fetches + logits fetches + prefill count fetches)
-                      "host_syncs": 0}
+                      "host_syncs": 0,
+                      "preemptions": 0, "restores": 0}
+        # state-pool counters (pages in use / peak, cache hit/miss/evict,
+        # prefill tokens saved, resident bytes) live in the same dict:
+        # the pool mutates engine stats directly
+        self.stats.update(self.pool.stats)
+        self.pool.stats = self.stats
         self.trace: List[dict] = []     # per (iter, layer) expert counts
         # per-MoE-layer EMA of observed expert counts — the load vector
         # fed back into the dynamic trajectory scheduler each iteration
@@ -236,19 +299,19 @@ class Engine:
     def submit(self, prompt: List[int], max_new: int) -> str:
         self._validate_request(prompt, max_new)
         if not self.free_slots:
-            raise RuntimeError("engine full — wait for completions")
+            raise QueueFullError("engine full — wait for completions")
         slot = self.free_slots.popleft()
         rid = f"req{next(self._rid)}"
         tokens = jnp.asarray(prompt, jnp.int32)[None]
         logits, caches1 = api.prefill_fn(self.params, {"tokens": tokens},
                                          self.cfg, self.scfg.max_ctx,
                                          spec=self.scfg.spec)
-        # merge per-request caches into the batched slot
-        def merge(big, small):
-            if not hasattr(small, "ndim") or small.ndim < 2:
-                return big
-            return big.at[:, slot:slot + 1].set(small.astype(big.dtype))
-        self.caches = jax.tree.map(merge, self.caches, caches1)
+        # scatter the per-request dense caches into the slot's pool
+        # pages (KV) and state row (SSM)
+        self.pool.ensure(slot, len(prompt))
+        self.caches = statepool.merge_prefill(
+            self.caches, caches1, self.pool.slot_pages[slot], slot,
+            self.scfg.page_size)
         self.cache_len[slot] = len(prompt)
         st = RequestState(rid=rid, slot=slot, prompt_len=len(prompt), max_new=max_new)
         first = self._sample(logits[0, -1])
@@ -262,16 +325,51 @@ class Engine:
         The prompt is consumed ``chunk_tokens`` at a time by subsequent
         :meth:`step` calls (piggybacked on the decode batch), so
         admission never blocks an iteration; the first token is emitted
-        by the step that caches the final prompt chunk."""
+        by the step that caches the final prompt chunk.
+
+        With ``ServeConfig.prefix_cache`` on, the longest cached prompt
+        prefix (content-hashed chain, see repro.serving.statepool) is
+        attached instead of recomputed: full pages share by refcount,
+        the partial tail page copies, the SSM snapshot restores by
+        value, and prefill resumes at the cached length — bit-identical
+        to the cold run because per-token prefill outputs are
+        chunk-partition-invariant under ``drop_free``."""
         self._validate_request(prompt, max_new)
         if not self.free_slots:
-            raise RuntimeError("engine full — wait for completions")
+            raise QueueFullError("engine full — wait for completions")
         slot = self.free_slots.popleft()
         rid = f"req{next(self._rid)}"
         self.cache_len[slot] = 0
         st = RequestState(rid=rid, slot=slot, prompt_len=len(prompt),
                           max_new=max_new, phase="prefill",
                           prompt=list(prompt))
+        hit = None
+        if self.scfg.prefix_cache:
+            st.prefix_keys = statepool.hash_chain(prompt)
+            # at least one prompt token must run so first-token logits
+            # exist — cap the usable prefix at len(prompt) - 1
+            hit = self.pool.lookup_prefix(st.prefix_keys, len(prompt) - 1)
+            if hit is not None:
+                try:
+                    copy = self.pool.attach_prefix(hit, slot)
+                except statepool.PoolExhausted:
+                    hit = None
+            if hit is not None:
+                if copy is not None:
+                    self.caches = statepool.copy_page(self.caches, *copy)
+                if hit.ssm != ():
+                    self.caches = statepool.restore_ssm(self.caches,
+                                                        hit.ssm, slot)
+                self.cache_len[slot] = hit.length
+                st.prefill_pos = hit.length
+                self._record_event("cache_hit", rid=rid, slot=slot,
+                                   cached_tokens=hit.length)
+            else:
+                self.stats["cache_misses"] += 1
+        if hit is None and self._has_ssm:
+            # a recycled slot must not leak the previous occupant's
+            # recurrent state into a fresh prompt
+            self.caches = statepool.zero_ssm(self.caches, slot)
         self.requests[rid] = st
         return rid
 
@@ -304,6 +402,49 @@ class Engine:
             self._iter_modeled_s += rec["modeled_s"]
         self.trace.append(rec)
 
+    def _record_event(self, event: str, **fields) -> None:
+        """Append one *event* trace record (``cache_hit`` / ``preempt``
+        / ``restore``).  Event records carry no ``counts`` and no
+        modeled seconds — consumers that aggregate expert flow skip
+        them (see docs/trace-format.md)."""
+        self.trace.append({"iter": self.iterations, "event": event,
+                           **fields})
+
+    def _ensure_pages(self) -> None:
+        """Host-side page allocation covering every KV write the coming
+        iteration performs (the page table is read-only inside the
+        jitted step).  A decode row writes one position; a prefill row
+        writes its chunk, plus one more when the prompt completes (the
+        row joins the decode batch in the same iteration)."""
+        K = max(1, self.scfg.chunk_tokens)
+        for r in self.active():
+            if r.phase == "prefill":
+                k_r = min(K, len(r.prompt) - r.prefill_pos)
+                length = int(self.cache_len[r.slot]) + k_r
+                if r.prefill_pos + k_r >= len(r.prompt):
+                    length += 1
+            else:
+                length = int(self.cache_len[r.slot]) + 1
+            self.pool.ensure(r.slot, min(length, self.scfg.max_ctx))
+        self._table_dev = jnp.asarray(self.pool.table)
+
+    def _register_prefix(self, r: RequestState) -> None:
+        """Cache the slot's state at this chunk boundary under the
+        prompt-prefix content hash.  Full pages are shared by refcount;
+        the pool returns a (src, dst) plan when the partial tail page
+        needs its own copy.  Skipped quietly when the pool cannot spare
+        a tail page even after LRU eviction."""
+        P = r.prefill_pos
+        snap = (statepool.snapshot_ssm(self.caches, r.slot)
+                if self._has_ssm else ())
+        try:
+            copy = self.pool.register_prefix(r.prefix_keys[P - 1], P,
+                                             r.slot, ssm=snap)
+        except statepool.PoolExhausted:
+            return
+        if copy is not None:
+            self.caches = statepool.copy_page(self.caches, *copy)
+
     def _prefill_chunk_step(self, fused: bool = False) -> List[Tuple[str, int]]:
         """Advance every prefilling request by one prompt chunk.
 
@@ -331,13 +472,15 @@ class Engine:
             ms = megastep.get_megastep(self.cfg, self.scfg)
             hid, self.caches, counts = ms.prefill(
                 self.params, tokens, self.caches,
-                jnp.asarray(self.cache_len), jnp.asarray(mask))
+                jnp.asarray(self.cache_len), self._table_dev,
+                jnp.asarray(mask))
             self.stats["host_syncs"] += 1       # the counts fetch below
         else:
             hid, self.caches, counts = api.prefill_chunk_fn(
                 self.params, jnp.asarray(tokens), self.caches,
                 jnp.asarray(self.cache_len), self.cfg, spec=scfg.spec,
-                token_mask=jnp.asarray(mask), return_hidden=True)
+                token_mask=jnp.asarray(mask), return_hidden=True,
+                page_table=self._table_dev)
         counts = np.asarray(counts, np.int64)
         for layer in range(self.L):
             if self._layer_kind(layer)[1] != "moe":
@@ -361,6 +504,8 @@ class Engine:
             self.cache_len[r.slot] += k_r
             r.prefill_pos += k_r
             self.stats["prefill_tokens"] += k_r
+            if scfg.prefix_cache and r.prefix_keys:
+                self._register_prefix(r)
             if r.prefill_pos < len(r.prompt):
                 continue
             # prompt fully cached: unembed just this row's final chunk
@@ -375,6 +520,7 @@ class Engine:
             if len(r.generated) >= r.max_new:
                 r.done = True
                 self.free_slots.append(r.slot)
+                self.pool.release_slot(r.slot)
                 self.policy.drop(r.rid)
         self.stats["prefill_chunks"] += len(pre)
         return out
@@ -384,6 +530,9 @@ class Engine:
         if not self.active():
             return []
         self._iter_modeled_s = 0.0
+        # allocate pages for this iteration's KV writes and push the
+        # table once; it enters every jitted segment as a traced array
+        self._ensure_pages()
         from repro.parallel import meshctx
         if self.scfg.fused and meshctx.get_mesh() is None:
             out = self._step_fused()
@@ -422,7 +571,8 @@ class Engine:
 
         if not bnds:
             self._x, self.caches, logits = ms.seg_only(
-                self.params, self._x, self.caches, cl, token_vec, start_mask)
+                self.params, self._x, self.caches, cl, self._table_dev,
+                token_vec, start_mask)
             for r in act:
                 if start_mask[r.slot]:
                     r.progress = 2 * self.L
@@ -435,8 +585,8 @@ class Engine:
                 r.progress = 2 * b0 + 1
         run_ffn = [r for r in act if not r.done and r.progress == 2 * b0 + 1]
         self._x, self.caches, h, routing, counts = ms.seg_first(
-            self.params, self._x, self.caches, cl, token_vec, start_mask,
-            self._mask([r.slot for r in run_ffn]))
+            self.params, self._x, self.caches, cl, self._table_dev,
+            token_vec, start_mask, self._mask([r.slot for r in run_ffn]))
         kept, order = self._boundary_fused(b0, run_ffn, routing, counts, ms)
 
         for j, b in enumerate(bnds[1:], start=1):
@@ -446,14 +596,15 @@ class Engine:
             run_ffn = [r for r in act
                        if not r.done and r.progress == 2 * b + 1]
             self._x, self.caches, h, routing, counts = ms.seg_mid[j - 1](
-                self.params, self._x, self.caches, cl, h, routing, order,
-                exec_mask, self._mask([r.slot for r in run_ffn]))
+                self.params, self._x, self.caches, cl, self._table_dev,
+                h, routing, order, exec_mask,
+                self._mask([r.slot for r in run_ffn]))
             kept, order = self._boundary_fused(b, run_ffn, routing, counts,
                                                ms)
 
         self._x, self.caches, logits = ms.seg_last(
-            self.params, self._x, self.caches, cl, h, routing, order,
-            self._mask([r.slot for r in kept]))
+            self.params, self._x, self.caches, cl, self._table_dev,
+            h, routing, order, self._mask([r.slot for r in kept]))
         for r in kept:
             r.progress = 2 * self.L
         return self._finish(act, logits, out, fetch=True)
@@ -504,6 +655,7 @@ class Engine:
                     int(self.cache_len[r.slot]) >= scfg.max_ctx - 1:
                 r.done = True
                 self.free_slots.append(r.slot)
+                self.pool.release_slot(r.slot)
                 self.policy.drop(r.rid)
         return out
 
@@ -570,7 +722,8 @@ class Engine:
     def _apply_mixer(self, x, layer, slots):
         x, self.caches = transformer.decode_mixer(
             self.params, x, self.caches, jnp.asarray(self.cache_len),
-            self.cfg, layer, self._mask(slots))
+            self.cfg, layer, self._mask(slots),
+            page_table=self._table_dev)
         return x
 
     def _slot_counts(self, routing, slots):
@@ -644,6 +797,60 @@ class Engine:
         return transformer.decode_moe_exec(
             self.params, x, h, routing_arg, self.cfg, layer,
             self._mask(slots), spec=self.scfg.spec, schedule=schedule)
+
+    # ------------------------------------------------------------------
+    # preemption: evict a request's state to the pool / restore it
+    # ------------------------------------------------------------------
+
+    def preempt(self, rid: str) -> statepool.PreemptedState:
+        """Evict an active request's state to the pool, freeing its slot.
+
+        Only requests at an iteration boundary (``progress == 0`` — not
+        mid-pass with a deferred hidden state in the residual buffer)
+        are restorable.  The page-table row detaches in O(1) (page
+        ownership transfers to the handle, no data movement) and the
+        SSM rows snapshot by value; :meth:`restore` resumes the request
+        bit-identically in any free slot."""
+        r = self.requests.get(rid)
+        if r is None or r.done:
+            raise ValueError(f"no active request {rid!r}")
+        if r.progress != 0:
+            raise ValueError(
+                f"request {rid!r} is mid-pass (progress={r.progress}): its "
+                f"deferred hidden state lives in the residual buffer and "
+                f"cannot be evicted — pick a victim at progress == 0")
+        snap = (statepool.snapshot_ssm(self.caches, r.slot)
+                if self._has_ssm else ())
+        handle = statepool.PreemptedState(
+            request=r, page_ids=self.pool.detach_slot(r.slot),
+            cache_len=int(self.cache_len[r.slot]), ssm=snap)
+        del self.requests[rid]
+        self.free_slots.append(r.slot)
+        r.preemptions += 1
+        self.stats["preemptions"] += 1
+        self._record_event("preempt", rid=rid, slot=r.slot,
+                           cache_len=handle.cache_len)
+        return handle
+
+    def restore(self, handle: statepool.PreemptedState) -> str:
+        """Resume a preempted request in a free slot (same engine rid,
+        so scheduler bookkeeping keyed on it stays valid)."""
+        if not self.free_slots:
+            raise QueueFullError("engine full — cannot restore preempted "
+                                 "request; wait for completions")
+        r = handle.request
+        slot = self.free_slots.popleft()
+        r.slot = slot
+        self.pool.attach_pages(slot, handle.page_ids)
+        self.cache_len[slot] = handle.cache_len
+        if handle.ssm != ():
+            self.caches = statepool.restore_ssm(self.caches, handle.ssm,
+                                                slot)
+        self.requests[r.rid] = r
+        self.stats["restores"] += 1
+        self._record_event("restore", rid=r.rid, slot=slot,
+                           cache_len=handle.cache_len)
+        return r.rid
 
     # ------------------------------------------------------------------
 

@@ -93,22 +93,28 @@ class MegaStep:
         L = cfg.num_layers
         bnds = self.boundaries
 
-        def prefill(params, tokens, caches, cache_len, token_mask):
+        # every segment takes the paged-KV ``table`` ((B, NP) int32) as a
+        # traced array right after cache_len: page allocation happens on
+        # the host between iterations, so table churn never retraces
+
+        def prefill(params, tokens, caches, cache_len, table, token_mask):
             self.traces += 1
             return transformer.prefill_chunk(
                 params, tokens, caches, cache_len, cfg, spec=spec,
-                token_mask=token_mask, return_hidden=True)
+                token_mask=token_mask, return_hidden=True, page_table=table)
 
         self.prefill = jax.jit(prefill, donate_argnums=(2,))
 
         if not bnds:
-            def only(params, x, caches, cache_len, token_vec, start_mask):
+            def only(params, x, caches, cache_len, table, token_vec,
+                     start_mask):
                 self.traces += 1
                 x = transformer.decode_embed_merge(params, x, token_vec,
                                                    start_mask, cfg)
                 x, caches = transformer.decode_span(params, x, caches,
                                                     cache_len, cfg, 0, L,
-                                                    start_mask)
+                                                    start_mask,
+                                                    page_table=table)
                 return x, caches, transformer.decode_logits(params, x, cfg)
 
             self.seg_only = jax.jit(only, donate_argnums=(1, 2))
@@ -117,15 +123,17 @@ class MegaStep:
 
         b0 = bnds[0]
 
-        def first(params, x, caches, cache_len, token_vec, start_mask,
+        def first(params, x, caches, cache_len, table, token_vec, start_mask,
                   count_mask):
             self.traces += 1
             x = transformer.decode_embed_merge(params, x, token_vec,
                                                start_mask, cfg)
             x, caches = transformer.decode_span(params, x, caches, cache_len,
-                                                cfg, 0, b0, start_mask)
+                                                cfg, 0, b0, start_mask,
+                                                page_table=table)
             x, caches = transformer.decode_mixer(params, x, caches, cache_len,
-                                                 cfg, b0, start_mask)
+                                                 cfg, b0, start_mask,
+                                                 page_table=table)
             h, routing, counts = transformer.decode_route(params, x, cfg, b0,
                                                           count_mask)
             return x, caches, h, routing, counts
@@ -133,7 +141,7 @@ class MegaStep:
         self.seg_first = jax.jit(first, donate_argnums=(1, 2))
 
         def make_mid(b_prev: int, b: int):
-            def mid(params, x, caches, cache_len, h, routing, order,
+            def mid(params, x, caches, cache_len, table, h, routing, order,
                     exec_mask, count_mask):
                 self.traces += 1
                 x = transformer.decode_moe_exec(
@@ -141,9 +149,10 @@ class MegaStep:
                     spec=spec, schedule=self._schedule(order))
                 x, caches = transformer.decode_span(
                     params, x, caches, cache_len, cfg, b_prev + 1, b,
-                    exec_mask)
+                    exec_mask, page_table=table)
                 x, caches = transformer.decode_mixer(
-                    params, x, caches, cache_len, cfg, b, exec_mask)
+                    params, x, caches, cache_len, cfg, b, exec_mask,
+                    page_table=table)
                 h, routing, counts = transformer.decode_route(params, x, cfg,
                                                               b, count_mask)
                 return x, caches, h, routing, counts
@@ -154,13 +163,15 @@ class MegaStep:
 
         b_tail = bnds[-1]
 
-        def last(params, x, caches, cache_len, h, routing, order, exec_mask):
+        def last(params, x, caches, cache_len, table, h, routing, order,
+                 exec_mask):
             self.traces += 1
             x = transformer.decode_moe_exec(
                 params, x, h, routing, cfg, b_tail, exec_mask,
                 spec=spec, schedule=self._schedule(order))
             x, caches = transformer.decode_span(params, x, caches, cache_len,
-                                                cfg, b_tail + 1, L, exec_mask)
+                                                cfg, b_tail + 1, L, exec_mask,
+                                                page_table=table)
             return x, caches, transformer.decode_logits(params, x, cfg)
 
         self.seg_last = jax.jit(last, donate_argnums=(1, 2))
@@ -181,7 +192,8 @@ def get_megastep(cfg, scfg) -> MegaStep:
     """
     try:
         key = (cfg, scfg.spec, scfg.max_batch, scfg.max_ctx,
-               scfg.chunk_tokens, kops.kernels_enabled(),
+               scfg.chunk_tokens, scfg.page_size, scfg.pool_pages,
+               kops.kernels_enabled(),
                moe_mod.sorted_dispatch_enabled())
         hash(key)
     except TypeError:

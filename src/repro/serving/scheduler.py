@@ -54,7 +54,7 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .engine import Engine
+from .engine import Engine, QueueFullError
 
 
 @dataclass
@@ -121,6 +121,13 @@ class ServingMetrics:
     tpot_modeled: Dict[str, float] = field(default_factory=dict)
     queue_delay_modeled: Dict[str, float] = field(default_factory=dict)
     elapsed_modeled: float = 0.0
+    # state-pool activity (mirrored from Engine.stats; see
+    # docs/statepool.md)
+    preemptions: int = 0
+    restores: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    prefill_tokens_saved: int = 0
 
     @property
     def throughput(self) -> float:
@@ -143,6 +150,10 @@ class ServingMetrics:
             "queue_delay_modeled": self.queue_delay_modeled,
             "elapsed_modeled": self.elapsed_modeled,
             "throughput_modeled": self.throughput_modeled,
+            "preemptions": self.preemptions, "restores": self.restores,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "prefill_tokens_saved": self.prefill_tokens_saved,
         }
 
 
@@ -170,6 +181,9 @@ class Scheduler:
         self.queue: Deque[Ticket] = deque()
         self.tickets: Dict[str, Ticket] = {}        # by scheduler rid
         self._by_engine: Dict[str, Ticket] = {}     # engine rid -> ticket
+        # preemption handles (Engine.preempt), restored oldest-first
+        # into slots left over once the admission queue drains
+        self._preempted: Deque = deque()
         self._rid = itertools.count()
         self.now = 0.0
         self.iteration = 0
@@ -226,17 +240,50 @@ class Scheduler:
         return self.queue.popleft()
 
     def admit_ready(self) -> List[str]:
-        """Fill free engine slots from the queue; returns admitted rids."""
+        """Fill free engine slots from the queue; returns admitted rids.
+
+        Queued arrivals take freed slots first — that is what a
+        preemption bought — and preempted requests are restored
+        (oldest-first, bit-identically) into whatever slots remain once
+        the queue drains.  A slot lost to a concurrent direct
+        ``submit`` surfaces as :class:`QueueFullError`, which requeues
+        the ticket instead of crashing the serving loop."""
         admitted = []
         while self.engine.free_slots and self.queue:
             t = self._pick()
-            t.engine_rid = self.engine.submit_chunked(t.prompt, t.max_new)
+            try:
+                t.engine_rid = self.engine.submit_chunked(t.prompt,
+                                                          t.max_new)
+            except QueueFullError:
+                self.queue.appendleft(t)
+                break
             t.admitted_at = self.now
             t.admitted_iter = self.iteration
             t.admitted_m = self.modeled_now
             self._by_engine[t.engine_rid] = t
             admitted.append(t.rid)
+        while self.engine.free_slots and self._preempted:
+            self.engine.restore(self._preempted.popleft())
         return admitted
+
+    def _maybe_preempt(self) -> None:
+        """Queue-pressure preemption: when the admission queue is deeper
+        than ``ServeConfig.preempt_queue_depth`` and no slot is free,
+        evict one restorable victim per step to the state pool — the
+        request with the most remaining work, at an iteration boundary,
+        not already preempted twice (the cap prevents thrash)."""
+        bound = self.engine.scfg.preempt_queue_depth
+        if bound is None or len(self.queue) <= bound \
+                or self.engine.free_slots:
+            return
+        victims = [r for r in self.engine.requests.values()
+                   if not r.done and r.progress == 0 and r.preemptions < 2]
+        if not victims:
+            return
+        v = max(victims,
+                key=lambda r: (r.max_new - len(r.generated))
+                + (len(r.prompt) - r.prefill_pos))
+        self._preempted.append(self.engine.preempt(v.rid))
 
     # ------------------------------------------------------------------
     # the serving loop
@@ -250,6 +297,7 @@ class Scheduler:
         fully deterministic).  Returns (rid, token) pairs in scheduler
         rids."""
         self.iteration += 1
+        self._maybe_preempt()
         self.admit_ready()
         events = self.engine.step()
         adv = getattr(self.engine, "last_step_modeled_s", 0.0)
@@ -324,6 +372,7 @@ class Scheduler:
         tpot_m = [(t.finished_m - t.first_token_m) / (len(t.tokens) - 1)
                   for t in done
                   if t.first_token_m is not None and len(t.tokens) > 1]
+        est = self.engine.stats
         return ServingMetrics(
             ttft=percentiles(ttft), tpot=percentiles(tpot),
             queue_delay=percentiles(qdel), completed=len(done),
@@ -332,4 +381,9 @@ class Scheduler:
             elapsed=self.now, iterations=self.iteration,
             ttft_modeled=percentiles(ttft_m), tpot_modeled=percentiles(tpot_m),
             queue_delay_modeled=percentiles(qdel_m),
-            elapsed_modeled=self.modeled_now)
+            elapsed_modeled=self.modeled_now,
+            preemptions=int(est.get("preemptions", 0)),
+            restores=int(est.get("restores", 0)),
+            cache_hits=int(est.get("cache_hits", 0)),
+            cache_misses=int(est.get("cache_misses", 0)),
+            prefill_tokens_saved=int(est.get("prefill_tokens_saved", 0)))

@@ -11,6 +11,14 @@ request's affinity seed): its prompt tokens are drawn from a skewed,
 request-specific slice of the vocab, which is what produces the
 long-tail expert activation the dynamic trajectory scheduler feeds on.
 
+Beyond the plain Poisson stream, ``TrafficConfig.mix`` composes
+modifiers ("+"-separated): ``zipf_prefix`` prepends Zipf-shared system
+prompts (the workload shape prefix caching feeds on — a few hot
+prefixes dominate), and ``diurnal`` modulates the arrival rate with a
+sinusoidal burst cycle (the queue-pressure shape that triggers
+preemption).  The default ``"poisson"`` stream is byte-identical to
+what this module generated before mixes existed.
+
 The same :class:`TrafficRequest` list replays into the simulator via
 ``to_sim_requests`` — engine and chiplet sim consume one workload.
 """
@@ -38,6 +46,23 @@ class TrafficConfig:
     vocab: int = 256
     num_chiplets: int = 4            # home-chiplet striping for the sim
     seed: int = 0
+    # traffic mix: "poisson" plus "+"-separated modifiers —
+    # "zipf_prefix" (Zipf-shared system prompts) and/or "diurnal"
+    # (sinusoidal arrival-rate bursts), e.g. "poisson+zipf_prefix"
+    mix: str = "poisson"
+    num_prefixes: int = 4            # distinct shared system prompts
+    prefix_len: int = 12             # tokens per shared prompt
+    prefix_zipf_s: float = 1.3       # skew of prefix popularity
+    burst_period: float = 16.0       # diurnal cycle (clock units)
+    burst_amplitude: float = 0.8     # rate modulation depth in [0, 1)
+
+    def __post_init__(self):
+        unknown = set(self.mix.split("+")) - {"poisson", "zipf_prefix",
+                                              "diurnal"}
+        if unknown:
+            raise ValueError(f"unknown traffic mix component(s) "
+                             f"{sorted(unknown)} — want 'poisson', "
+                             f"'zipf_prefix', 'diurnal' joined by '+'")
 
 
 @dataclass
@@ -73,10 +98,35 @@ def make_traffic(cfg: TrafficConfig) -> List[TrafficRequest]:
                                f"{cfg.num_requests} requests")
     sized = sized[:cfg.num_requests]
 
+    parts = set(cfg.mix.split("+"))
+    prefixes: List[List[int]] = []
+    prefix_probs = None
+    if "zipf_prefix" in parts:
+        # shared system prompts, deterministic per seed; popularity is
+        # Zipf-skewed via the simulator's sampler (a hot head of reused
+        # prefixes is the workload prefix caching feeds on).  At least
+        # one private token must follow, so cap at max_prompt - 1.
+        prng = np.random.default_rng(cfg.seed + 10_007)
+        plen_shared = min(cfg.prefix_len, max(1, cfg.max_prompt - 1))
+        for _ in range(cfg.num_prefixes):
+            pprobs = sim_workload.sample_expert_probs(cfg.vocab, prng,
+                                                      zipf_s=cfg.zipf_s)
+            prefixes.append(prng.choice(cfg.vocab, size=plen_shared,
+                                        p=pprobs).tolist())
+        prefix_probs = sim_workload.sample_expert_probs(
+            cfg.num_prefixes, prng, zipf_s=cfg.prefix_zipf_s)
+
     out: List[TrafficRequest] = []
     now = 0.0
     for i, req in enumerate(sized):
-        now += float(rng.exponential(1.0 / max(cfg.rate, 1e-9)))
+        rate = max(cfg.rate, 1e-9)
+        if "diurnal" in parts:
+            # sinusoidal rate modulation: bursts above the mean rate
+            # alternate with troughs — the queue-pressure shape that
+            # exercises the scheduler's preemption policy
+            phase = np.sin(2.0 * np.pi * now / max(cfg.burst_period, 1e-9))
+            rate = max(rate * (1.0 + cfg.burst_amplitude * phase), 1e-9)
+        now += float(rng.exponential(1.0 / rate))
         plen = int(np.clip(req.num_tokens, cfg.min_prompt, cfg.max_prompt))
         # per-request Zipf affinity over the vocab: a private permutation
         # of Zipf-ranked probabilities, seeded by the request's affinity
@@ -85,6 +135,11 @@ def make_traffic(cfg: TrafficConfig) -> List[TrafficRequest]:
         probs = sim_workload.sample_expert_probs(cfg.vocab, arng,
                                                  zipf_s=cfg.zipf_s)
         prompt = arng.choice(cfg.vocab, size=plen, p=probs).tolist()
+        if prefixes:
+            shared = prefixes[int(rng.choice(len(prefixes),
+                                             p=prefix_probs))]
+            keep = max(1, cfg.max_prompt - len(shared))
+            prompt = shared + prompt[:keep]
         max_new = int(rng.integers(cfg.min_new, cfg.max_new + 1))
         out.append(TrafficRequest(rid=f"traffic{i}", arrival=now,
                                   prompt=[int(t) for t in prompt],

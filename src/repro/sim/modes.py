@@ -269,6 +269,8 @@ def replay_trace(hw: HardwareConfig, spec: ModelSpec, trace, *,
     """
     total = 0.0
     for rec in trace:
+        if "counts" not in rec:
+            continue                    # cache_hit/preempt/restore events
         counts = np.asarray(rec["counts"], np.float64)
         if counts.sum() <= 0:
             continue

@@ -130,13 +130,15 @@ def workloads_from_trace(trace, num_chiplets: int):
 
     ``trace`` is ``Engine.trace``: records with ``iter`` / ``layer`` /
     ``counts`` (see README trace-format spec; prefill-chunk and decode
-    records both qualify).  Returns ``[(iter, layer, LayerWorkload)]``
+    records both qualify, event records without ``counts`` —
+    cache_hit/preempt/restore — are skipped).
+    Returns ``[(iter, layer, LayerWorkload)]``
     in trace order — feed each through ``sim.engine.simulate_layer`` or
     ``sim.modes`` to cross-validate the engine's schedule decisions.
     """
     return [(int(rec["iter"]), int(rec["layer"]),
              workload_from_counts(rec["counts"], num_chiplets))
-            for rec in trace]
+            for rec in trace if "counts" in rec]
 
 
 def trace_expert_totals(trace) -> Dict[int, np.ndarray]:
@@ -147,6 +149,8 @@ def trace_expert_totals(trace) -> Dict[int, np.ndarray]:
     """
     totals: Dict[int, np.ndarray] = {}
     for rec in trace:
+        if "counts" not in rec:
+            continue                    # cache_hit/preempt/restore events
         c = np.asarray(rec["counts"], np.int64)
         layer = int(rec["layer"])
         if layer in totals:

@@ -24,6 +24,7 @@ DOCS = REPO / "docs"
 DOC_PAGES = [
     "architecture.md",
     "trace-format.md",
+    "statepool.md",
     "execution-spec.md",
     "benchmarks.md",
 ]
