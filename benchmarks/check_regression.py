@@ -13,7 +13,11 @@ Compares ``artifacts/bench/*.json`` (produced by this run's
   each row's pallas_ms/einsum_ms ratio (both sides measured in the same
   run, so host speed cancels) against the baseline row's ratio; FAIL if
   the *median* relative slowdown across matched rows exceeds
-  --tolerance (median absorbs per-row CI jitter).
+  --tolerance (median absorbs per-row CI jitter).  Once the baseline
+  carries the quantized columns, the int8-streaming block is gated
+  deterministically: expert-weight bytes must undercut bf16 by >= 40%
+  and oracle parity must stay within 2% rel Frobenius
+  (docs/quantization.md).
 * BENCH_moe_strategies.json — deterministic metrics: the cross-family
   ``auto`` planner must pick the same family as the baseline, and each
   strategy row's HLO collective bytes must stay within --tolerance
@@ -120,6 +124,48 @@ def check_streamed_moe(base, cur, tol, failures):
         if med > tol:
             failures.append(f"BENCH_streamed_moe[{col}]: median relative "
                             f"slowdown {med:+.1%} exceeds {tol:.0%}")
+    check_quant_block(base, cur, failures)
+
+
+# quantized-streaming acceptance: int8 expert-weight DDR bytes (weights +
+# per-channel scale rows) must undercut the bf16 stream by >= 40%, and
+# the quantized oracle must stay within the documented 2% relative
+# Frobenius error of the fp32 reference (docs/quantization.md)
+QUANT_BYTES_FLOOR = 0.40
+QUANT_REL_ERR_CEIL = 0.02
+
+
+def check_quant_block(base, cur, failures):
+    """Quantized-streaming gate — active only once the committed
+    baseline carries the quantized columns (older baselines skip it).
+    Both gated metrics are deterministic: the bytes reduction is pure
+    shape arithmetic and the parity error is a fixed-seed oracle
+    comparison, so no timing noise enters."""
+    if not any("quant_bytes_reduction" in r for r in base["rows"]):
+        return
+    rows = [r for r in cur["rows"] if "quant_bytes_reduction" in r]
+    if not rows:
+        failures.append("BENCH_streamed_moe[quant]: quantized columns "
+                        "disappeared — the int8 streaming branch is gated")
+        return
+    worst_red = min(r["quant_bytes_reduction"] for r in rows)
+    worst_err = max(r["quant_rel_err"] for r in rows)
+    if worst_red < QUANT_BYTES_FLOOR:
+        bad = [r for r in rows
+               if r["quant_bytes_reduction"] < QUANT_BYTES_FLOOR][0]
+        failures.append(
+            f"BENCH_streamed_moe[quant]: bytes reduction "
+            f"{worst_red:.1%} < floor {QUANT_BYTES_FLOOR:.0%} "
+            f"({bad['config']} m={bad['m_slice']})")
+    if worst_err > QUANT_REL_ERR_CEIL:
+        bad = [r for r in rows if r["quant_rel_err"] > QUANT_REL_ERR_CEIL][0]
+        failures.append(
+            f"BENCH_streamed_moe[quant]: int8 oracle parity "
+            f"{worst_err:.4f} > {QUANT_REL_ERR_CEIL} rel Frobenius "
+            f"({bad['config']} m={bad['m_slice']})")
+    print(f"BENCH_streamed_moe[quant]: {len(rows)} rows, worst bytes "
+          f"reduction {worst_red:.1%} (floor {QUANT_BYTES_FLOOR:.0%}), "
+          f"worst rel err {worst_err:.4f} (ceil {QUANT_REL_ERR_CEIL})")
 
 
 def check_moe_strategies(base, cur, tol, failures):

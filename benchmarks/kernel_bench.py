@@ -6,8 +6,11 @@ expert-FFN shapes of the config zoo, at several micro-slice widths
 (the quantity that actually streams in FSE-DP's ring), plus the kernel
 with tiles chosen by the ``core.autotune`` scheduler
 (``ops.streamed_moe_autotuned`` — the same planner every model path
-dispatches through).  Emits ``BENCH_streamed_moe.json`` under
-artifacts/bench/.
+dispatches through), and the int8 quantized-streaming branch
+(``weight_dtype="int8"`` — per-channel scales dequantized in VMEM),
+recording its deterministic weight-bytes reduction vs bf16 and oracle
+parity (gated by check_regression.py; see docs/quantization.md).
+Emits ``BENCH_streamed_moe.json`` under artifacts/bench/.
 
 Usage:
   PYTHONPATH=src python benchmarks/kernel_bench.py [--quick] [--full]
@@ -115,22 +118,50 @@ def main(argv=None):
                 with ops.use_kernels(True), autotune.use_autotune("analytic"):
                     return ops.streamed_moe_autotuned(xe, wg, wu, wd, act)
 
+            def quant_fn(xe, wg, wu, wd):
+                with ops.use_kernels(True):
+                    return ops.streamed_moe(xe, wg, wu, wd, act,
+                                            weight_dtype="int8")
+
             t_ref = time_fn(jax.jit(ref_fn), xe, wg, wu, wd, reps=reps)
             t_pal = time_fn(jax.jit(pallas_fn), xe, wg, wu, wd, reps=reps)
             t_tun = time_fn(jax.jit(tuned_fn), xe, wg, wu, wd, reps=reps)
+            t_qnt = time_fn(jax.jit(quant_fn), xe, wg, wu, wd, reps=reps)
             tiles = autotune.kernel_opts_for(E, C, d, m, act, dtype_bytes=4,
                                              level="analytic")
+            # quantized-streaming accounting + parity (both deterministic,
+            # so check_regression gates them machine-independently):
+            # int8 weights + per-(expert, output-channel) fp32 scale rows
+            # vs the bf16 stream, and the quantized oracle's relative
+            # Frobenius distance from the exact fp32 reference
+            n_up = 2 if act == "swiglu" else 1
+            bf16_bytes = n_w * E * d * m * 2
+            int8_bytes = n_w * E * d * m + (n_up * m + d) * E * 4
+            y_f = ref_fn(xe, wg, wu, wd)
+            with ops.use_kernels(False):
+                y_q = ops.streamed_moe(xe, wg, wu, wd, act,
+                                       weight_dtype="int8")
+            rel = float(jnp.linalg.norm(y_q - y_f) / jnp.linalg.norm(y_f))
             row = {"config": name, "E": E, "d_model": d, "d_expert": de,
                    "slice_div": div, "m_slice": m, "C": C, "activation": act,
                    "einsum_ms": round(t_ref * 1e3, 4),
                    "pallas_ms": round(t_pal * 1e3, 4),
                    "autotuned_ms": round(t_tun * 1e3, 4),
+                   "quant_ms": round(t_qnt * 1e3, 4),
+                   "quant_weight_bytes": int8_bytes,
+                   "bf16_weight_bytes": bf16_bytes,
+                   "quant_bytes_reduction": round(1 - int8_bytes / bf16_bytes,
+                                                  4),
+                   "quant_rel_err": round(rel, 6),
                    "autotuned_tiles": tiles,
                    "speedup": round(t_ref / t_pal, 3) if t_pal else None}
             rows.append(row)
             print(f"{name:24s} E={E:<3d} d={d:<6d} m={m:<6d} C={C:<4d} {act:7s}"
                   f" einsum={row['einsum_ms']:.3f}ms pallas={row['pallas_ms']:.3f}ms"
-                  f" tuned={row['autotuned_ms']:.3f}ms x{row['speedup']}")
+                  f" tuned={row['autotuned_ms']:.3f}ms x{row['speedup']}"
+                  f" int8={row['quant_ms']:.3f}ms"
+                  f" (-{row['quant_bytes_reduction']:.0%} bytes,"
+                  f" rel {row['quant_rel_err']:.1e})")
     if skipped:
         print(f"# skipped {skipped} rows over the {budget >> 20} MiB "
               f"weight budget (use --full / more RAM)")

@@ -220,6 +220,8 @@ def load_rows(E: int, C: int, assignments: float,
 def streaming_layer_cost(E: int, C: int, d: int, de: int, n_mats: int,
                          assignments: float, profile: HardwareProfile, *,
                          dtype_bytes: int = 2,
+                         weight_bytes: Optional[int] = None,
+                         resident: int = 0,
                          load: Optional[Tuple[float, ...]] = None
                          ) -> Dict[str, float]:
     """Closed-form seconds for one MoE layer run as the paper's expert
@@ -242,15 +244,26 @@ def streaming_layer_cost(E: int, C: int, d: int, de: int, n_mats: int,
 
     Dispatch/combine one-hot FLOPs are excluded to match the referee's
     scope (it prices the expert flow only).
+
+    ``weight_bytes`` is the *streamed* bytes per expert-weight param
+    (quantized storage, ``kernels.quant``; ``None`` = ``dtype_bytes`` —
+    the pre-quantization model, bit for bit; per-channel scale streams
+    are ~4/d of the weight bytes and excluded).  ``resident`` experts
+    (EMA-hot tiering) have their weights pinned on-package: they pay no
+    DDR stream, and — because the engine pins the *hottest* experts,
+    which the paired trajectory visits first — their compute hides the
+    first cold expert's fill whenever any expert is resident.
     """
     rows, active = load_rows(E, C, assignments, load)
-    expert_bytes = float(n_mats * d * de * dtype_bytes)
+    wb = dtype_bytes if weight_bytes is None else weight_bytes
+    expert_bytes = float(n_mats * d * de * wb)
+    cold = max(0, active - max(0, int(resident)))
     t_comp = 2.0 * n_mats * rows * d * de / profile.peak_flops
-    t_ddr = active * expert_bytes / profile.mem_bw
-    t_fill = expert_bytes / profile.mem_bw
+    t_ddr = cold * expert_bytes / profile.mem_bw
+    t_fill = expert_bytes / profile.mem_bw if cold == active and cold else 0.0
     return {"total_s": t_fill + max(t_comp, t_ddr - t_fill),
             "t_comp_s": t_comp, "t_ddr_s": t_ddr, "t_fill_s": t_fill,
-            "rows": rows, "active": float(active)}
+            "rows": rows, "active": float(active), "cold": float(cold)}
 
 
 @dataclass(frozen=True)
@@ -270,7 +283,9 @@ class ServingCostModel:
     ``dtype_bytes`` defaults to the prototype's bf16 weights regardless
     of the host dtype: the clock models the paper's chiplet array, not
     the machine the engine happens to run on (matching the referee's
-    ``ModelSpec.expert_bytes``).
+    ``ModelSpec.expert_bytes``).  ``weight_bytes`` overrides the
+    *streamed* expert-weight byte width (quantized storage,
+    ``kernels.quant``) without touching the activation terms.
     """
 
     profile: HardwareProfile
@@ -281,10 +296,12 @@ class ServingCostModel:
     top_k: int
     capacity_factor: float
     dtype_bytes: int = 2
+    weight_bytes: Optional[int] = None
 
     @classmethod
     def from_config(cls, cfg,
-                    profile: Optional[HardwareProfile] = None
+                    profile: Optional[HardwareProfile] = None,
+                    weight_bytes: Optional[int] = None
                     ) -> "ServingCostModel":
         """Build from a repro ModelConfig (must have MoE)."""
         assert cfg.moe is not None, "cost model needs an MoE config"
@@ -293,10 +310,22 @@ class ServingCostModel:
                    d_expert=cfg.moe.d_expert,
                    n_mats=3 if cfg.activation == "swiglu" else 2,
                    top_k=cfg.moe.top_k,
-                   capacity_factor=cfg.moe.capacity_factor)
+                   capacity_factor=cfg.moe.capacity_factor,
+                   weight_bytes=weight_bytes)
 
-    def layer_s(self, counts, *, dynamic: bool = False) -> float:
-        """Modeled seconds for one layer's observed expert counts."""
+    @property
+    def expert_bytes(self) -> int:
+        """Streamed DDR bytes for one expert's weights."""
+        wb = self.dtype_bytes if self.weight_bytes is None else self.weight_bytes
+        return int(self.n_mats * self.d_model * self.d_expert * wb)
+
+    def layer_s(self, counts, *, dynamic: bool = False,
+                resident: int = 0) -> float:
+        """Modeled seconds for one layer's observed expert counts.
+
+        ``resident`` is the number of would-be-loaded experts whose
+        weights are pinned on-package (EMA-hot tiering): they skip
+        their DDR stream term."""
         total = float(sum(float(c) for c in counts))
         tokens = max(1, math.ceil(total / max(1, self.top_k)))
         C = _cap(tokens, self.top_k, self.num_experts, self.capacity_factor)
@@ -306,6 +335,7 @@ class ServingCostModel:
         return streaming_layer_cost(
             self.num_experts, C, self.d_model, self.d_expert, self.n_mats,
             total, self.profile, dtype_bytes=self.dtype_bytes,
+            weight_bytes=self.weight_bytes, resident=resident,
             load=load)["total_s"]
 
 
@@ -329,7 +359,8 @@ def mode_cost(mode: str, B: int, S: int, d: int, E: int, de: int,
               top_k: int, cf: float, n_mats: int, P: int,
               profile: HardwareProfile, micro_slices: int,
               dtype_bytes: int = 2,
-              load: Optional[Tuple[float, ...]] = None) -> Dict[str, float]:
+              load: Optional[Tuple[float, ...]] = None,
+              weight_bytes: Optional[int] = None) -> Dict[str, float]:
     """Predicted per-device seconds for one MoE layer under ``mode``.
 
     Mirrors the SPMD bodies in ``core.fse_dp`` term by term:
@@ -346,9 +377,16 @@ def mode_cost(mode: str, B: int, S: int, d: int, E: int, de: int,
     to the observed-gating trajectory model: rows scale with the actual
     per-expert assignments and only *active* experts pay weight
     ring/DDR traffic.  ``None`` is bit-identical to the pre-load model.
+
+    ``weight_bytes`` is the streamed expert-weight byte width (quantized
+    storage, ``kernels.quant``): it scales every weight ring/DDR term
+    while activations (dispatch buffers, all-gathers, psums) keep
+    ``dtype_bytes``.  ``None`` = ``dtype_bytes`` — the pre-quantization
+    model, bit for bit.
     """
     T = B * S
-    wb = ab = dtype_bytes
+    ab = dtype_bytes
+    wb = dtype_bytes if weight_bytes is None else weight_bytes
     de_loc = de / P
     M = max(1, micro_slices)
 
@@ -404,7 +442,8 @@ def mode_cost(mode: str, B: int, S: int, d: int, E: int, de: int,
 def ep_cost(B: int, S: int, d: int, E: int, de: int, top_k: int, cf: float,
             n_mats: int, P: int, profile: HardwareProfile,
             dtype_bytes: int = 2,
-            load: Optional[Tuple[float, ...]] = None) -> Dict[str, float]:
+            load: Optional[Tuple[float, ...]] = None,
+            weight_bytes: Optional[int] = None) -> Dict[str, float]:
     """Predicted per-device seconds for one MoE layer under the EP
     (expert-parallel) baseline family — the cross-family referee for the
     ``auto`` strategy (``repro.core.strategy``).
@@ -415,9 +454,12 @@ def ep_cost(B: int, S: int, d: int, E: int, de: int, top_k: int, cf: float,
     expert compute.  No weight movement at all (EP's structural
     advantage over the streaming family), but two all-to-alls whose
     bytes scale with the routed token rows (its structural cost).
+    ``weight_bytes`` scales the local weight-shard DDR term only
+    (``None`` = ``dtype_bytes``).
     """
     T = B * S
-    ab = wb = dtype_bytes
+    ab = dtype_bytes
+    wb = dtype_bytes if weight_bytes is None else weight_bytes
     T_loc = T / P
     C = _cap(int(math.ceil(T_loc)), top_k, E, cf)
     E_loc = E / P
@@ -455,59 +497,75 @@ def _micro_candidates(de_loc: int, configured: int) -> List[int]:
 # ---------------------------------------------------------------------------
 
 
-def _fit_tile(dim: int, req: int) -> int:
-    t = max(1, min(int(req), dim))
-    while dim % t:
-        t -= 1
-    return t
+# the one tile-rounding rule, shared with the kernel so planner and
+# lowering can never disagree on a requested tile (satellite of the
+# quantized-streaming work: previously duplicated here)
+from repro.kernels.streamed_moe import fit_tile as _fit_tile  # noqa: E402
 
 
 def tile_vmem_bytes(Tc: int, Ti: int, Tj: int, Tk: int, gated: bool,
-                    dtype_bytes: int = 2) -> int:
+                    dtype_bytes: int = 2,
+                    weight_bytes: Optional[int] = None) -> int:
     """VMEM working set of one ``streamed_moe_kernel`` grid step.
 
     Streamed blocks (x + weights) are double-buffered by Pallas; the
     fp32 output block and the pre-activation scratch are not.
+    ``weight_bytes`` is the streamed weight-block byte width (quantized
+    storage; ``None`` = ``dtype_bytes``) — 1-byte formats also stream
+    their per-output-channel fp32 scale rows.
     """
     n_up = 2 if gated else 1
-    streamed = Tc * Ti * dtype_bytes + n_up * Ti * Tk * dtype_bytes \
-        + Tk * Tj * dtype_bytes
+    wb = dtype_bytes if weight_bytes is None else weight_bytes
+    streamed = Tc * Ti * dtype_bytes + n_up * Ti * Tk * wb + Tk * Tj * wb
+    if wb == 1:                         # int8/fp8 scale rows ride along
+        streamed += (n_up * Tk + Tj) * 4
     resident = Tc * Tj * 4 + (1 + (1 if gated else 0)) * Tc * Tk * 4
     return 2 * streamed + resident
 
 
 def kernel_tile_cost(E: int, C: int, d: int, m: int, Tc: int, Tj: int,
                      Tk: int, gated: bool, profile: HardwareProfile,
-                     dtype_bytes: int = 2) -> Dict[str, float]:
+                     dtype_bytes: int = 2,
+                     weight_bytes: Optional[int] = None) -> Dict[str, float]:
     """Roofline score of one tile choice for the grid (E, C/Tc, d/Tj, m/Tk, d/Ti).
 
     Models the kernel's real revisit pattern: up/gate GEMMs recompute once
-    per output-d tile (d/Tj), weight blocks re-stream once per token tile.
+    per output-d tile (d/Tj), weight blocks re-stream once per token tile
+    (at ``weight_bytes`` per param when the streamed format is quantized).
     """
     n_up = 2 if gated else 1
+    wb = dtype_bytes if weight_bytes is None else weight_bytes
     Ti = Tj
     Cp = math.ceil(C / Tc) * Tc
     flops = 2.0 * E * Cp * d * m * n_up * (d / Tj) + 2.0 * E * Cp * m * d
     hbm = (E * Cp * d * dtype_bytes * (d / Tj) * (m / Tk)          # x refetch
-           + n_up * E * (Cp / Tc) * (d / Tj) * m * d * dtype_bytes  # w_up/gate
-           + E * (Cp / Tc) * (d / Ti) * m * d * dtype_bytes         # w_down
+           + n_up * E * (Cp / Tc) * (d / Tj) * m * d * wb           # w_up/gate
+           + E * (Cp / Tc) * (d / Ti) * m * d * wb                  # w_down
            + E * Cp * d * 4 * (m / Tk))                             # out revisits
     t = flops / profile.peak_flops + hbm / profile.mem_bw
     return {"t": t, "flops": flops, "hbm": hbm,
-            "vmem": tile_vmem_bytes(Tc, Ti, Tj, Tk, gated, dtype_bytes)}
+            "vmem": tile_vmem_bytes(Tc, Ti, Tj, Tk, gated, dtype_bytes,
+                                    weight_bytes)}
 
 
-def default_tiles(C: int, d: int, m: int, dtype_bytes: int = 2) -> Tuple[int, int, int]:
-    """The (Tc, Tj, Tk) the kernel picks with no explicit opts."""
+def default_tiles(C: int, d: int, m: int, dtype_bytes: int = 2,
+                  weight_bytes: Optional[int] = None) -> Tuple[int, int, int]:
+    """The (Tc, Tj, Tk) the kernel picks with no explicit opts.
+
+    ``weight_bytes`` mirrors the kernel's rule exactly: the default
+    hidden tile is sized off the *streamed operand's* itemsize, so
+    quantized weights fit proportionally larger Tk per VMEM block."""
     from repro.kernels.streamed_moe import DEFAULT_TOKEN_TILE, VMEM_BLOCK_BYTES
+    wb = dtype_bytes if weight_bytes is None else weight_bytes
     Tc = min(DEFAULT_TOKEN_TILE, max(C, 1))
-    Tk = _fit_tile(m, max(1, VMEM_BLOCK_BYTES // max(1, d * dtype_bytes)))
+    Tk = _fit_tile(m, max(1, VMEM_BLOCK_BYTES // max(1, d * wb)))
     return Tc, d, Tk
 
 
 def plan_kernel_tiles(E: int, C: int, d: int, m: int, activation: str,
                       profile: Optional[HardwareProfile] = None,
-                      dtype_bytes: int = 2) -> Dict[str, object]:
+                      dtype_bytes: int = 2,
+                      weight_bytes: Optional[int] = None) -> Dict[str, object]:
     """Score candidate (token_tile, dmodel_tile, dexpert_tile) and return
     the winner + its predicted time and VMEM footprint.
 
@@ -515,10 +573,12 @@ def plan_kernel_tiles(E: int, C: int, d: int, m: int, activation: str,
     analytic level only departs from today's lowering when the model says
     the default genuinely loses (e.g. VMEM overflow forcing d_model
     tiling, or tiny C making a 128-row token tile mostly padding).
+    ``weight_bytes`` makes the race quantization-aware: streamed weight
+    blocks shrink, so larger hidden tiles fit the same VMEM budget.
     """
     profile = profile or HardwareProfile.detect()
     gated = activation == "swiglu"
-    dTc, dTj, dTk = default_tiles(C, d, m, dtype_bytes)
+    dTc, dTj, dTk = default_tiles(C, d, m, dtype_bytes, weight_bytes)
 
     tc_cands = sorted({dTc} | {t for t in (32, 64, 128, 256) if t <= max(C, 1)})
     tk_cands = sorted({dTk} | {t for t in {m, m // 2, m // 4} if t >= 1})
@@ -531,7 +591,7 @@ def plan_kernel_tiles(E: int, C: int, d: int, m: int, activation: str,
             for tk_req in tk_cands:
                 Tk = _fit_tile(m, tk_req)
                 sc = kernel_tile_cost(E, C, d, m, Tc, Tj, Tk, gated,
-                                      profile, dtype_bytes)
+                                      profile, dtype_bytes, weight_bytes)
                 fits = sc["vmem"] <= profile.vmem_bytes
                 is_default = (Tc, Tj, Tk) == (dTc, dTj, dTk)
                 # fitting candidates race on predicted time (default wins
@@ -597,7 +657,8 @@ def _save_cache() -> None:
 
 def measured_kernel_tiles(E: int, C: int, d: int, m: int, activation: str,
                           dtype_bytes: int = 2, reps: int = 3,
-                          profile: Optional[HardwareProfile] = None) -> dict:
+                          profile: Optional[HardwareProfile] = None,
+                          weight_bytes: Optional[int] = None) -> dict:
     """Time candidate tile lowerings of the streamed-MoE kernel once and
     memoize the winner (keyed by backend/jax-version/shape) under
     ``artifacts/autotune/kernel_tiles.json``.
@@ -617,11 +678,13 @@ def measured_kernel_tiles(E: int, C: int, d: int, m: int, activation: str,
 
     _load_cache()
     key = (f"{jax.default_backend()}/{jax.__version__}/"
-           f"E{E}_C{C}_d{d}_m{m}_{activation}_b{dtype_bytes}")
+           f"E{E}_C{C}_d{d}_m{m}_{activation}_b{dtype_bytes}"
+           + (f"_w{weight_bytes}" if weight_bytes is not None else ""))
     if key in _MEASURED:
         return _MEASURED[key]
 
-    analytic = plan_kernel_tiles(E, C, d, m, activation, profile, dtype_bytes)
+    analytic = plan_kernel_tiles(E, C, d, m, activation, profile,
+                                 dtype_bytes, weight_bytes)
     cands: List[Dict[str, int]] = [{}]                    # kernel defaults
     opt = {k: v for k, v in analytic.items()
            if k in ("token_tile", "dmodel_tile", "dexpert_tile") and v}
@@ -672,14 +735,18 @@ def measured_kernel_tiles(E: int, C: int, d: int, m: int, activation: str,
 @functools.lru_cache(maxsize=4096)
 def _kernel_opts_cached(E: int, C: int, d: int, m: int, activation: str,
                         dtype_bytes: int, level: str,
-                        profile: HardwareProfile) -> Tuple[Tuple[str, int], ...]:
+                        profile: HardwareProfile,
+                        weight_bytes: Optional[int]
+                        ) -> Tuple[Tuple[str, int], ...]:
     if level == "off":
         return ()
     if level == "measured":
         entry = measured_kernel_tiles(E, C, d, m, activation, dtype_bytes,
-                                      profile=profile)
+                                      profile=profile,
+                                      weight_bytes=weight_bytes)
         return tuple(sorted((k, v) for k, v in entry["opts"].items() if v))
-    tiles = plan_kernel_tiles(E, C, d, m, activation, profile, dtype_bytes)
+    tiles = plan_kernel_tiles(E, C, d, m, activation, profile, dtype_bytes,
+                              weight_bytes)
     return tuple(sorted(
         (k, v) for k, v in tiles.items()
         if k in ("token_tile", "dmodel_tile", "dexpert_tile") and v))
@@ -687,14 +754,17 @@ def _kernel_opts_cached(E: int, C: int, d: int, m: int, activation: str,
 
 def kernel_opts_for(E: int, C: int, d: int, m: int, activation: str,
                     dtype_bytes: int = 2, *, level: Optional[str] = None,
-                    profile: Optional[HardwareProfile] = None) -> Dict[str, int]:
+                    profile: Optional[HardwareProfile] = None,
+                    weight_bytes: Optional[int] = None) -> Dict[str, int]:
     """Tile kwargs for one ``streamed_moe`` call shape under the ambient
-    (or given) autotune level.  ``{}`` at level 'off' — kernel defaults."""
+    (or given) autotune level.  ``{}`` at level 'off' — kernel defaults.
+    ``weight_bytes`` is the streamed weight byte width (quantized
+    storage; ``None`` = ``dtype_bytes``)."""
     level = level or autotune_level()
     profile = profile or HardwareProfile.detect()
-    return dict(_kernel_opts_cached(int(E), int(C), int(d), int(m),
-                                    activation, int(dtype_bytes), level,
-                                    profile))
+    return dict(_kernel_opts_cached(
+        int(E), int(C), int(d), int(m), activation, int(dtype_bytes), level,
+        profile, None if weight_bytes is None else int(weight_bytes)))
 
 
 # ---------------------------------------------------------------------------
@@ -716,7 +786,8 @@ def _plan_moe_cached(B: int, S: int, d: int, E: int, de: int, top_k: int,
                      activation: str, profile: HardwareProfile,
                      dtype_bytes: int, level: str,
                      force_mode: Optional[str],
-                     load: Optional[Tuple[float, ...]]) -> Plan:
+                     load: Optional[Tuple[float, ...]],
+                     weight_bytes: Optional[int]) -> Plan:
     if level == "off" and force_mode is None:
         return fallback_plan(B, S, P, micro_cfg)
 
@@ -736,7 +807,7 @@ def _plan_moe_cached(B: int, S: int, d: int, E: int, de: int, top_k: int,
             if mode in ("stream", "index") else [1]
         for M in micro_cands:
             c = mode_cost(mode, B, S, d, E, de, top_k, cf, n_mats, P,
-                          profile, M, dtype_bytes, load)
+                          profile, M, dtype_bytes, load, weight_bytes)
             if mode_best is None or c["total_s"] < mode_best[0]:
                 mode_best = (c["total_s"], M)
         per_mode[mode] = mode_best[0]
@@ -750,15 +821,16 @@ def _plan_moe_cached(B: int, S: int, d: int, E: int, de: int, top_k: int,
     m_step = max(1, de_loc // M) if mode in ("stream", "index") else de_loc
     if level == "measured":
         entry = measured_kernel_tiles(E, C, d, m_step, activation,
-                                      dtype_bytes, profile=profile)
+                                      dtype_bytes, profile=profile,
+                                      weight_bytes=weight_bytes)
         opts = dict(entry["opts"])
         tiles = plan_kernel_tiles(E, C, d, m_step, activation, profile,
-                                  dtype_bytes)
+                                  dtype_bytes, weight_bytes)
         vmem = tiles["vmem_bytes"]
         source = "measured"
     else:
         tiles = plan_kernel_tiles(E, C, d, m_step, activation, profile,
-                                  dtype_bytes)
+                                  dtype_bytes, weight_bytes)
         opts = {k: v for k, v in tiles.items()
                 if k in ("token_tile", "dmodel_tile", "dexpert_tile")}
         vmem = tiles["vmem_bytes"]
@@ -778,7 +850,8 @@ def plan_moe(B: int, S: int, d_model: int, moe, activation: str, P: int,
              *, profile: Optional[HardwareProfile] = None,
              dtype_bytes: int = 2, level: Optional[str] = None,
              mode: Optional[str] = None,
-             load: Optional[Tuple[float, ...]] = None) -> Plan:
+             load: Optional[Tuple[float, ...]] = None,
+             weight_bytes: Optional[int] = None) -> Plan:
     """Score all feasible (mode, micro_slices, tiles) and return the winner.
 
     ``moe`` is a :class:`repro.configs.base.MoEConfig`; ``P`` the model-axis
@@ -786,8 +859,10 @@ def plan_moe(B: int, S: int, d_model: int, moe, activation: str, P: int,
     remaining knobs) — used by benchmarks and the parity tests.  ``load``
     conditions the cost model on a normalized per-expert load vector
     (dynamic trajectory scheduling; ``None`` = the uniform shape-only
-    model).  Pure Python — call freely at trace time; results are
-    memoized.
+    model).  ``weight_bytes`` is the streamed expert-weight byte width
+    (quantized storage, ``kernels.quant``; ``None`` = ``dtype_bytes``) —
+    it scales every weight ring/DDR term and the tile race.  Pure Python
+    — call freely at trace time; results are memoized.
     """
     level = level or autotune_level()
     profile = profile or HardwareProfile.detect()
@@ -799,7 +874,8 @@ def plan_moe(B: int, S: int, d_model: int, moe, activation: str, P: int,
                             int(moe.top_k), float(moe.capacity_factor),
                             n_mats, int(moe.micro_slices), int(P),
                             activation, profile, int(dtype_bytes), level,
-                            mode, load)
+                            mode, load,
+                            None if weight_bytes is None else int(weight_bytes))
 
 
 _PICK_MODE_WARNED = False

@@ -332,8 +332,10 @@ def moe_fse_dp(params, x, moe: MoEConfig, activation, *, axis="model",
 
     if plan is None:
         from . import autotune
+        from repro.kernels import quant
         plan = autotune.plan_moe(B_grp, S, d, moe, activation, P_,
-                                 dtype_bytes=jnp.dtype(x.dtype).itemsize)
+                                 dtype_bytes=jnp.dtype(x.dtype).itemsize,
+                                 weight_bytes=quant.weight_bytes())
     mode = plan.mode
     kopts = tuple(sorted(plan.kernel_opts().items()))
     body = {"stream": _local_moe_stream,

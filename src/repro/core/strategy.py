@@ -107,6 +107,10 @@ class ExecutionSpec:
     schedule: Optional[str] = None          # static | dynamic (None=static)
     use_kernels: Optional[bool] = None      # None = ambient kernels toggle
     sorted_dispatch: Optional[bool] = None  # None = ambient dispatch mode
+    weight_dtype: Optional[str] = None      # fp32 | bf16 | int8 | fp8
+                                            # (streamed expert-weight format,
+                                            # kernels.quant; None = params
+                                            # as-is)
 
     def __post_init__(self):
         object.__setattr__(self, "layer_overrides",
@@ -116,6 +120,8 @@ class ExecutionSpec:
         if self.schedule not in (None, "static", "dynamic"):
             raise ValueError(f"unknown schedule policy {self.schedule!r} "
                              f"(want 'static' or 'dynamic')")
+        from repro.kernels import quant
+        quant.check_weight_dtype(self.weight_dtype)
 
     # ---- resolution ---------------------------------------------------
 
@@ -161,6 +167,9 @@ class ExecutionSpec:
             if self.sorted_dispatch is not None:
                 from repro.models.moe import use_sorted_dispatch
                 stack.enter_context(use_sorted_dispatch(self.sorted_dispatch))
+            if self.weight_dtype is not None:
+                from repro.kernels import quant
+                stack.enter_context(quant.use_weight_dtype(self.weight_dtype))
             yield self
 
     # ---- (de)serialization -------------------------------------------
@@ -173,7 +182,8 @@ class ExecutionSpec:
         if self.layer_overrides:
             out["layer_overrides"] = {str(k): v
                                       for k, v in self.layer_overrides}
-        for f in ("autotune", "schedule", "use_kernels", "sorted_dispatch"):
+        for f in ("autotune", "schedule", "use_kernels", "sorted_dispatch",
+                  "weight_dtype"):
             if getattr(self, f) is not None:
                 out[f] = getattr(self, f)
         return out
@@ -232,10 +242,12 @@ class StrategyContext:
     moe: MoEConfig
     activation: str
     P: int = 1               # model-axis size
-    dtype_bytes: int = 2
+    dtype_bytes: int = 2     # activation bytes per element
     level: Optional[str] = None
     profile: Optional[HardwareProfile] = None
     load: Optional[Tuple[float, ...]] = None  # per-expert load shares
+    weight_bytes: Optional[int] = None  # streamed expert-weight bytes/param
+                                        # (None = dtype_bytes)
 
     @classmethod
     def from_inputs(cls, x, moe: MoEConfig, activation: str,
@@ -255,9 +267,11 @@ class StrategyContext:
                 bsz *= mesh.shape[a]
             if batch and B % bsz == 0:
                 B //= bsz
+        from repro.kernels import quant
         return cls(B=int(B), S=int(S), d_model=int(d), moe=moe,
                    activation=activation, P=int(P_),
-                   dtype_bytes=jnp.dtype(x.dtype).itemsize, load=load)
+                   dtype_bytes=jnp.dtype(x.dtype).itemsize, load=load,
+                   weight_bytes=quant.weight_bytes())
 
 
 @runtime_checkable
@@ -354,7 +368,8 @@ def family_costs(B: int, S: int, d_model: int, moe: MoEConfig,
                  activation: str, P: int, *,
                  profile: Optional[HardwareProfile] = None,
                  dtype_bytes: int = 2,
-                 load: Optional[Tuple[float, ...]] = None) -> Dict[str, float]:
+                 load: Optional[Tuple[float, ...]] = None,
+                 weight_bytes: Optional[int] = None) -> Dict[str, float]:
     """Predicted seconds per candidate family for one MoE layer.
 
     ``load`` conditions every family's cost curve on a normalized
@@ -381,16 +396,18 @@ def family_costs(B: int, S: int, d_model: int, moe: MoEConfig,
     if ring:
         out["fse_dp"] = min(
             autotune.mode_cost(m, B, S, d_model, E, de, k, cf, n_mats, P,
-                               profile, M, dtype_bytes, load)["total_s"]
+                               profile, M, dtype_bytes, load,
+                               weight_bytes)["total_s"]
             for m in ring
             for M in autotune._micro_candidates(de_loc, moe.micro_slices))
     if ep_feasible(B, S, E, P):
         out["ep"] = autotune.ep_cost(B, S, d_model, E, de, k, cf, n_mats,
-                                     P, profile, dtype_bytes,
-                                     load)["total_s"]
+                                     P, profile, dtype_bytes, load,
+                                     weight_bytes)["total_s"]
     out["tp"] = autotune.mode_cost("slice", B, S, d_model, E, de, k, cf,
                                    n_mats, P, profile, 1,
-                                   dtype_bytes, load)["total_s"]
+                                   dtype_bytes, load,
+                                   weight_bytes)["total_s"]
     return out
 
 
@@ -404,7 +421,8 @@ def _plan_family_cached(B: int, S: int, d_model: int, moe: MoEConfig,
                         activation: str, P: int,
                         profile: Optional[HardwareProfile],
                         dtype_bytes: int, level: str,
-                        load: Optional[Tuple[float, ...]]) -> Plan:
+                        load: Optional[Tuple[float, ...]],
+                        weight_bytes: Optional[int]) -> Plan:
     if P == 1:
         return Plan(mode="capacity", family="capacity", micro_slices=1,
                     source="fallback")
@@ -414,13 +432,15 @@ def _plan_family_cached(B: int, S: int, d_model: int, moe: MoEConfig,
         # fallback_plan, which the deprecated pick_mode also wraps)
         return autotune.fallback_plan(B, S, P, moe.micro_slices)
     costs = family_costs(B, S, d_model, moe, activation, P,
-                         profile=profile, dtype_bytes=dtype_bytes, load=load)
+                         profile=profile, dtype_bytes=dtype_bytes, load=load,
+                         weight_bytes=weight_bytes)
     family = pick_family(costs)
     per_family = tuple(sorted((f, float(s)) for f, s in costs.items()))
     if family == "fse_dp":
         plan = autotune.plan_moe(B, S, d_model, moe, activation, P,
                                  profile=profile, dtype_bytes=dtype_bytes,
-                                 level=level, load=load)
+                                 level=level, load=load,
+                                 weight_bytes=weight_bytes)
         return dataclasses.replace(plan, per_mode_s=plan.per_mode_s
                                    + per_family)
     return Plan(mode=family, family=family, micro_slices=1,
@@ -433,18 +453,22 @@ def plan_family(B: int, S: int, d_model: int, moe: MoEConfig,
                 profile: Optional[HardwareProfile] = None,
                 dtype_bytes: int = 2,
                 level: Optional[str] = None,
-                load: Optional[Tuple[float, ...]] = None) -> Plan:
+                load: Optional[Tuple[float, ...]] = None,
+                weight_bytes: Optional[int] = None) -> Plan:
     """Cross-family planner: score EP and TP cost curves alongside the
     FSE-DP ring modes and return the winning family's Plan.  ``load``
     conditions the race on an observed per-expert load vector (dynamic
-    trajectory re-planning).  Pure Python — call freely at trace time;
-    memoized."""
+    trajectory re-planning); ``weight_bytes`` on the streamed
+    expert-weight byte width (quantized storage).  Pure Python — call
+    freely at trace time; memoized."""
     level = level or autotune.autotune_level()
     if load is not None:
         load = tuple(float(v) for v in load)
     return _plan_family_cached(int(B), int(S), int(d_model), moe,
                                activation, int(P), profile,
-                               int(dtype_bytes), level, load)
+                               int(dtype_bytes), level, load,
+                               None if weight_bytes is None
+                               else int(weight_bytes))
 
 
 # ---------------------------------------------------------------------------
@@ -519,7 +543,8 @@ class FseDpStrategy:
                                  ctx.activation, ctx.P,
                                  profile=ctx.profile,
                                  dtype_bytes=ctx.dtype_bytes,
-                                 level=ctx.level, load=ctx.load)
+                                 level=ctx.level, load=ctx.load,
+                                 weight_bytes=ctx.weight_bytes)
 
     def execute(self, params, x, moe, activation, plan=None, *,
                 axis="model", routing=None, schedule=None):
@@ -543,7 +568,7 @@ class EpStrategy:
                              ctx.moe.num_experts, ctx.moe.d_expert,
                              ctx.moe.top_k, ctx.moe.capacity_factor,
                              n_mats, ctx.P, profile, ctx.dtype_bytes,
-                             ctx.load)
+                             ctx.load, ctx.weight_bytes)
         return Plan(mode="ep", family="ep", micro_slices=1,
                     predicted_s=c["total_s"], source="analytic")
 
@@ -567,7 +592,7 @@ class TpStrategy:
                                ctx.moe.num_experts, ctx.moe.d_expert,
                                ctx.moe.top_k, ctx.moe.capacity_factor,
                                n_mats, ctx.P, profile, 1, ctx.dtype_bytes,
-                               ctx.load)
+                               ctx.load, ctx.weight_bytes)
         return Plan(mode="tp", family="tp", micro_slices=1,
                     predicted_s=c["total_s"], source="analytic")
 
@@ -587,7 +612,7 @@ class AutoStrategy:
         return plan_family(ctx.B, ctx.S, ctx.d_model, ctx.moe,
                            ctx.activation, ctx.P, profile=ctx.profile,
                            dtype_bytes=ctx.dtype_bytes, level=ctx.level,
-                           load=ctx.load)
+                           load=ctx.load, weight_bytes=ctx.weight_bytes)
 
     def execute(self, params, x, moe, activation, plan=None, *,
                 axis="model", routing=None, schedule=None):

@@ -20,7 +20,7 @@ import os
 
 import jax
 
-from . import ref
+from . import quant, ref
 from .streamed_moe import streamed_moe_kernel
 from .flash_attention import flash_attention_kernel
 from .ssd import ssd_intra_chunk_kernel
@@ -46,20 +46,36 @@ def kernels_enabled() -> bool:
 # streamed_moe — differentiable kernel dispatch
 # ---------------------------------------------------------------------------
 
-def _streamed_moe_raw(activation, opts, xe, w_g, w_u, w_d):
-    return streamed_moe_kernel(xe, w_g, w_u, w_d, activation=activation,
-                               **dict(opts))
+def _streamed_moe_raw(activation, weight_dtype, opts, xe, w_g, w_u, w_d):
+    if weight_dtype in quant.QUANTIZED:
+        # quantize in-graph at the dispatch layer: params keep their
+        # original dtype; the kernel streams int8/fp8 blocks plus
+        # per-(expert, output-channel) scale rows and dequantizes in VMEM
+        s_g = None
+        if w_g is not None:
+            w_g, s_g = quant.quantize(w_g, weight_dtype)
+        w_u, s_u = quant.quantize(w_u, weight_dtype)
+        w_d, s_d = quant.quantize(w_d, weight_dtype)
+        return streamed_moe_kernel(xe, w_g, w_u, w_d, activation=activation,
+                                   s_g=s_g, s_u=s_u, s_d=s_d, **dict(opts))
+    return streamed_moe_kernel(xe, quant.storage_cast(w_g, weight_dtype),
+                               quant.storage_cast(w_u, weight_dtype),
+                               quant.storage_cast(w_d, weight_dtype),
+                               activation=activation, **dict(opts))
 
 
-_streamed_moe_diff = jax.custom_vjp(_streamed_moe_raw, nondiff_argnums=(0, 1))
+_streamed_moe_diff = jax.custom_vjp(_streamed_moe_raw,
+                                    nondiff_argnums=(0, 1, 2))
 
 
-def _streamed_moe_fwd(activation, opts, xe, w_g, w_u, w_d):
-    out = _streamed_moe_raw(activation, opts, xe, w_g, w_u, w_d)
+def _streamed_moe_fwd(activation, weight_dtype, opts, xe, w_g, w_u, w_d):
+    out = _streamed_moe_raw(activation, weight_dtype, opts, xe, w_g, w_u, w_d)
     return out, (xe, w_g, w_u, w_d)
 
 
-def _streamed_moe_bwd(activation, opts, res, g):
+def _streamed_moe_bwd(activation, weight_dtype, opts, res, g):
+    # straight-through: the backward of the quantized forward is the
+    # full-precision oracle VJP on the original weights
     xe, w_g, w_u, w_d = res
     _, vjp = jax.vjp(
         lambda xe, wg, wu, wd: ref.streamed_moe_ref(xe, wg, wu, wd, activation),
@@ -72,11 +88,24 @@ _streamed_moe_diff.defvjp(_streamed_moe_fwd, _streamed_moe_bwd)
 
 def streamed_moe(xe, w_g, w_u, w_d, activation: str, **kw):
     """Grouped expert FFN over one micro-slice.  ``w_g=None`` selects the
-    gateless path natively (no placeholder operand)."""
+    gateless path natively (no placeholder operand).
+
+    ``weight_dtype`` (kwarg or the ambient ``quant.use_weight_dtype``
+    context, entered by ``ExecutionSpec.scope()``) selects the streamed
+    storage format for the expert weights: int8/fp8 quantize in-graph
+    with per-(expert, output-channel) scales; the oracle fallback runs
+    the identical quantize→dequantize round-trip, so ``use_kernels(False)``
+    stays the ground truth at any weight dtype."""
+    kw = dict(kw)
+    wdt = quant.check_weight_dtype(kw.pop("weight_dtype", None))
+    if wdt is None:
+        wdt = quant.weight_dtype()
     if not kernels_enabled():
-        return ref.streamed_moe_ref(xe, w_g, w_u, w_d, activation)
+        if wdt is None:
+            return ref.streamed_moe_ref(xe, w_g, w_u, w_d, activation)
+        return ref.streamed_moe_quant_ref(xe, w_g, w_u, w_d, activation, wdt)
     opts = tuple(sorted(kw.items()))
-    return _streamed_moe_diff(activation, opts, xe, w_g, w_u, w_d)
+    return _streamed_moe_diff(activation, wdt, opts, xe, w_g, w_u, w_d)
 
 
 def streamed_moe_autotuned(xe, w_g, w_u, w_d, activation: str):
@@ -88,15 +117,18 @@ def streamed_moe_autotuned(xe, w_g, w_u, w_d, activation: str):
 
     This is the one scheduler every expert-FFN path dispatches through:
     the FSE-DP ring step, the EP/TP baselines, and the single-device
-    capacity path."""
+    capacity path.  The ambient weight dtype feeds the planner its
+    streamed bytes-per-param, so quantized runs plan (and cost) larger
+    hidden tiles per VMEM block."""
     opts = {}
     if kernels_enabled():
         from repro.core import autotune
         E, C, d = xe.shape
         m = w_u.shape[-1]
+        stored = jax.numpy.dtype(w_u.dtype).itemsize
         opts = autotune.kernel_opts_for(
-            E, C, d, m, activation,
-            dtype_bytes=jax.numpy.dtype(w_u.dtype).itemsize)
+            E, C, d, m, activation, dtype_bytes=stored,
+            weight_bytes=quant.weight_bytes(default=stored))
     return streamed_moe(xe, w_g, w_u, w_d, activation, **opts)
 
 

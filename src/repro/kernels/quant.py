@@ -1,0 +1,125 @@
+"""Weight quantization for expert streaming (the streamed storage format).
+
+The paper's bottleneck is moving expert weights over DDR/D2D at low
+batch, so bytes-per-param multiplies directly into every cost the
+trajectory scheduler and autotuner model.  This module defines the
+*streamed* storage format for expert FFN weights — independent of the
+parameter dtype the model was initialized with:
+
+  fp32 / bf16  — plain storage (bf16 is a round-trip cast when params
+                 are wider), 4 / 2 bytes per param;
+  int8         — symmetric, per-(expert, output-channel) scales,
+                 q = round(w / s) clipped to [-127, 127], 1 byte;
+  fp8          — ``float8_e4m3fn`` with the same per-channel scaling
+                 (absmax mapped to the fp8 max, 448), 1 byte.
+
+Scales are computed over the contraction axis (axis -2 of the stacked
+(E, d_in, d_out) weight), giving one fp32 scale per (expert, output
+channel): shape (E, 1, d_out).  That granularity ships as a tiny side
+operand next to each weight block in the Pallas kernel — (1, 1, Tk)
+blocks riding the same grid indices as the weight tile — and
+dequantizes in VMEM before the GEMM.
+
+Quantization happens **in-graph at the dispatch layer**
+(``kernels.ops.streamed_moe``): params keep their original dtype, so
+shard_map partition specs, optimizer state, and checkpoints never
+change.  The jnp oracle applies the identical quantize→dequantize
+round-trip, so ``use_kernels(False)`` stays the ground truth under any
+weight dtype (tolerance contract: ``docs/quantization.md``).
+
+The ambient weight dtype is a contextvar (like ``ops.use_kernels``),
+entered by ``ExecutionSpec.scope()`` so one spec field threads the
+format end-to-end through every execution body.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax.numpy as jnp
+
+# streamed bytes per parameter for each supported format
+WEIGHT_DTYPES = {"fp32": 4, "bf16": 2, "int8": 1, "fp8": 1}
+# formats that ship a per-channel scale side operand
+QUANTIZED = ("int8", "fp8")
+
+INT8_MAX = 127.0
+FP8_DTYPE = jnp.float8_e4m3fn
+FP8_MAX = 448.0           # float8_e4m3fn finfo.max
+
+_WDT = contextvars.ContextVar("repro_weight_dtype", default=None)
+
+
+def check_weight_dtype(name):
+    if name is not None and name not in WEIGHT_DTYPES:
+        raise ValueError(f"unknown weight_dtype {name!r}; "
+                         f"known: {sorted(WEIGHT_DTYPES)}")
+    return name
+
+
+@contextlib.contextmanager
+def use_weight_dtype(name):
+    """Ambient streamed-weight format for ``kernels.ops.streamed_moe``
+    dispatch (``None`` = params as-is, the untouched default)."""
+    tok = _WDT.set(check_weight_dtype(name))
+    try:
+        yield
+    finally:
+        _WDT.reset(tok)
+
+
+def weight_dtype():
+    """The ambient streamed-weight format name, or None."""
+    return _WDT.get()
+
+
+def weight_bytes(name=None, default=None):
+    """Streamed bytes per param for ``name`` (or the ambient format);
+    ``default`` when neither is set."""
+    if name is None:
+        name = _WDT.get()
+    if name is None:
+        return default
+    return WEIGHT_DTYPES[check_weight_dtype(name)]
+
+
+def quantize(w, name):
+    """w: (..., d_in, d_out) -> (q, scale) with per-(leading, out-channel)
+    symmetric scales of shape (..., 1, d_out) fp32."""
+    wf = w.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(wf), axis=-2, keepdims=True)
+    if name == "int8":
+        scale = jnp.where(absmax > 0, absmax, 1.0) / INT8_MAX
+        q = jnp.clip(jnp.round(wf / scale), -INT8_MAX, INT8_MAX)
+        return q.astype(jnp.int8), scale
+    if name == "fp8":
+        scale = jnp.where(absmax > 0, absmax, 1.0) / FP8_MAX
+        return (wf / scale).astype(FP8_DTYPE), scale
+    raise ValueError(f"not a quantized weight_dtype: {name!r}")
+
+
+def dequantize(q, scale):
+    """Inverse of :func:`quantize` — fp32 values (lossy round-trip)."""
+    return q.astype(jnp.float32) * scale
+
+
+def storage_cast(w, name):
+    """The unquantized formats: cast ``w`` to its streamed storage dtype
+    (identity for fp32 params under 'fp32')."""
+    if w is None:
+        return None
+    if name == "bf16":
+        return w.astype(jnp.bfloat16)
+    if name in (None, "fp32"):
+        return w
+    raise ValueError(f"not a storage-cast weight_dtype: {name!r}")
+
+
+def fake_quant(w, name):
+    """Round-trip ``w`` through the streamed format, returned as fp32 —
+    the oracle-side view of what the kernel computes with."""
+    if w is None:
+        return None
+    if name in QUANTIZED:
+        return dequantize(*quantize(w, name))
+    return storage_cast(w, name).astype(jnp.float32)

@@ -27,6 +27,22 @@ def streamed_moe_ref(xe, w_g, w_u, w_d, activation: str):
     return jnp.einsum("ecm,emd->ecd", h, w_d).astype(jnp.float32)
 
 
+def streamed_moe_quant_ref(xe, w_g, w_u, w_d, activation: str,
+                           weight_dtype: str):
+    """Quantized-streaming oracle: round-trip the expert weights through
+    the streamed storage format (``kernels.quant.fake_quant`` — the
+    identical per-(expert, output-channel) quantize→dequantize the
+    Pallas kernel performs in VMEM), then run the exact fp32 einsum
+    reference.  This is the ground truth the quantized kernel is tested
+    against (tolerance contract: ``docs/quantization.md``)."""
+    from . import quant
+    return streamed_moe_ref(xe.astype(jnp.float32),
+                            quant.fake_quant(w_g, weight_dtype),
+                            quant.fake_quant(w_u, weight_dtype),
+                            quant.fake_quant(w_d, weight_dtype),
+                            activation)
+
+
 # ---------------------------------------------------------------------------
 # flash attention (causal)
 # ---------------------------------------------------------------------------

@@ -38,20 +38,34 @@ DEFAULT_TOKEN_TILE = 128
 VMEM_BLOCK_BYTES = 4 * 1024 * 1024
 
 
-def _fit_tile(dim: int, req: int) -> int:
-    """Largest divisor of ``dim`` that is <= ``req`` (>= 1)."""
+def fit_tile(dim: int, req: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``req`` (>= 1).
+
+    The one tile-rounding rule shared by this kernel and the
+    ``core.autotune`` planner, so requested tiles can never drift
+    between what the planner costs and what the kernel lowers."""
     t = max(1, min(int(req), dim))
     while dim % t:
         t -= 1
     return t
 
 
-def _kernel(*refs, activation, nI, C, Tc):
-    if activation == "swiglu":
-        x_ref, wg_ref, wu_ref, wd_ref, o_ref, hu_ref, hg_ref = refs
+_fit_tile = fit_tile  # backward-compat alias
+
+
+def _kernel(*refs, activation, quantized, nI, C, Tc):
+    gated = activation == "swiglu"
+    n_in = (4 if gated else 3) + (quantized * (3 if gated else 2))
+    x_ref, *w_refs = refs[:n_in]
+    o_ref, hu_ref, *rest = refs[n_in:]
+    hg_ref = rest[0] if gated else None
+    if gated:
+        wg_ref, wu_ref, wd_ref = w_refs[:3]
+        sg_ref, su_ref, sd_ref = w_refs[3:] if quantized else (None,) * 3
     else:
-        x_ref, wu_ref, wd_ref, o_ref, hu_ref = refs
-        wg_ref = hg_ref = None
+        wu_ref, wd_ref = w_refs[:2]
+        wg_ref = sg_ref = None
+        su_ref, sd_ref = w_refs[2:] if quantized else (None, None)
     c = pl.program_id(1)
     k = pl.program_id(3)
     i = pl.program_id(4)
@@ -62,10 +76,19 @@ def _kernel(*refs, activation, nI, C, Tc):
         if hg_ref is not None:
             hg_ref[...] = jnp.zeros_like(hg_ref)
 
+    def _load_up(w_ref, s_ref):
+        w = w_ref[0]                  # (Ti, Tk) — int8/fp8 when quantized
+        if s_ref is not None:
+            # dequantize in VMEM: per-output-channel scale row (1,1,Tk)
+            w = w.astype(jnp.float32) * s_ref[0, 0][None, :]
+        return w
+
     x = x_ref[0]                      # (Tc, Ti)
-    hu_ref[...] += jnp.dot(x, wu_ref[0], preferred_element_type=jnp.float32)
+    hu_ref[...] += jnp.dot(x, _load_up(wu_ref, su_ref),
+                           preferred_element_type=jnp.float32)
     if hg_ref is not None:
-        hg_ref[...] += jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+        hg_ref[...] += jnp.dot(x, _load_up(wg_ref, sg_ref),
+                               preferred_element_type=jnp.float32)
 
     @pl.when(i == nI - 1)
     def _finalize():
@@ -79,6 +102,8 @@ def _kernel(*refs, activation, nI, C, Tc):
         row = c * Tc + jax.lax.broadcasted_iota(jnp.int32, h.shape, 0)
         h = jnp.where(row < C, h, 0.0)
         wd = wd_ref[0]                # (Tk, Tj)
+        if sd_ref is not None:
+            wd = wd.astype(jnp.float32) * sd_ref[0, 0][None, :]
         contrib = jnp.dot(h.astype(wd.dtype), wd,
                           preferred_element_type=jnp.float32)
 
@@ -92,6 +117,7 @@ def _kernel(*refs, activation, nI, C, Tc):
 
 
 def streamed_moe_kernel(xe, w_g, w_u, w_d, *, activation: str,
+                        s_g=None, s_u=None, s_d=None,
                         token_tile: int = DEFAULT_TOKEN_TILE,
                         dmodel_tile: int | None = None,
                         dexpert_tile: int | None = None,
@@ -100,6 +126,14 @@ def streamed_moe_kernel(xe, w_g, w_u, w_d, *, activation: str,
 
     Returns (E,C,d) float32.  ``w_g`` is required for swiglu and ignored
     (never lowered as an operand) for the gateless activations.
+
+    Quantized streaming: when ``s_u``/``s_d`` (and ``s_g`` for swiglu)
+    are given, the weight operands are int8/fp8 with per-(expert,
+    output-channel) fp32 scales — s_g/s_u: (E,1,m), s_d: (E,1,d)
+    (``kernels.quant``).  Scale rows ship as (1,1,Tk)/(1,1,Tj) side
+    blocks riding the same grid indices as their weight tile and are
+    dequantized in VMEM right before each GEMM, so DDR->VMEM traffic is
+    one byte per weight plus a ~1/d_in-sized scale stream.
 
     ``dmodel_tile`` tiles d_model on both sides of the expert FFN
     (contraction of the up-projection and output of the down-projection);
@@ -115,8 +149,11 @@ def streamed_moe_kernel(xe, w_g, w_u, w_d, *, activation: str,
     E, C, d = xe.shape
     m = w_u.shape[-1]
     gated = activation == "swiglu"
+    quantized = s_u is not None
     if gated and w_g is None:
         raise ValueError("activation='swiglu' requires w_g")
+    if quantized and (s_d is None or (gated and s_g is None)):
+        raise ValueError("quantized weights need scales for every operand")
     if activation not in ("swiglu", "relu2", "gelu"):
         raise ValueError(f"unknown activation {activation!r}")
     if interpret is None:
@@ -130,11 +167,11 @@ def streamed_moe_kernel(xe, w_g, w_u, w_d, *, activation: str,
         xe = jnp.pad(xe, ((0, 0), (0, pad), (0, 0)))
     Cp = C + pad
 
-    itemsize = jnp.dtype(w_u.dtype).itemsize
+    itemsize = jnp.dtype(w_u.dtype).itemsize    # 1 for int8/fp8 operands
     if dexpert_tile is None:
         dexpert_tile = max(1, VMEM_BLOCK_BYTES // max(1, d * itemsize))
-    Tk = _fit_tile(m, dexpert_tile)
-    Tj = Ti = _fit_tile(d, dmodel_tile if dmodel_tile is not None else d)
+    Tk = fit_tile(m, dexpert_tile)
+    Tj = Ti = fit_tile(d, dmodel_tile if dmodel_tile is not None else d)
     nI = d // Ti
     grid = (E, Cp // Tc, d // Tj, m // Tk, nI)
 
@@ -148,12 +185,22 @@ def streamed_moe_kernel(xe, w_g, w_u, w_d, *, activation: str,
         pl.BlockSpec((1, Tk, Tj), lambda e, c, j, k, i: (e, k, j)),   # w_down
     ]
     operands += [w_u, w_d]
+    if quantized:
+        # per-output-channel scale rows, block-indexed like their weights
+        up_spec = pl.BlockSpec((1, 1, Tk), lambda e, c, j, k, i: (e, 0, k))
+        if gated:
+            in_specs.append(up_spec)
+            operands.append(s_g)
+        in_specs += [up_spec,
+                     pl.BlockSpec((1, 1, Tj), lambda e, c, j, k, i: (e, 0, j))]
+        operands += [s_u, s_d]
     scratch = [pltpu.VMEM((Tc, Tk), jnp.float32)]                     # pre-act up
     if gated:
         scratch.append(pltpu.VMEM((Tc, Tk), jnp.float32))             # pre-act gate
 
     out = pl.pallas_call(
-        functools.partial(_kernel, activation=activation, nI=nI, C=C, Tc=Tc),
+        functools.partial(_kernel, activation=activation,
+                          quantized=quantized, nI=nI, C=C, Tc=Tc),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, Tc, Tj), lambda e, c, j, k, i: (e, c, j)),

@@ -51,6 +51,8 @@ def build_spec(args):
         spec = dataclasses.replace(spec, autotune=args.autotune)
     if getattr(args, "schedule", None):
         spec = dataclasses.replace(spec, schedule=args.schedule)
+    if getattr(args, "weight_dtype", None):
+        spec = dataclasses.replace(spec, weight_dtype=args.weight_dtype)
     return spec
 
 
@@ -83,6 +85,20 @@ def main():
                          "'dynamic' re-plans each layer's trajectory from "
                          "the EMA of observed gating counts (outputs are "
                          "bit-identical; execution order changes)")
+    ap.add_argument("--weight-dtype", choices=("fp32", "bf16", "int8", "fp8"),
+                    default=None,
+                    help="streamed storage format for expert FFN weights "
+                         "(kernels.quant): int8/fp8 quantize in-graph with "
+                         "per-channel scales and halve/quarter the expert "
+                         "DDR stream; default keeps params as-is (see "
+                         "docs/quantization.md)")
+    ap.add_argument("--resident-budget-mb", type=float, default=0.0,
+                    help="EMA-hot expert weight tier: total bytes of "
+                         "expert weights pinned resident on-package "
+                         "(split evenly across MoE layers; hottest "
+                         "experts by LoadTracker EMA); resident experts "
+                         "skip their DDR stream in the modeled clock and "
+                         "trace. 0 disables the tier")
     ap.add_argument("--dry-run", action="store_true",
                     help="validate the spec (JSON round-trip + registry) "
                          "and exercise one tiny request, then exit "
@@ -157,7 +173,8 @@ def main():
             buffering_slack=args.slack, theta_min=args.theta_min,
             chunk_tokens=args.chunk_tokens, spec=spec, seed=args.seed,
             page_size=args.page_size, prefix_cache=args.prefix_cache,
-            preempt_queue_depth=args.preempt_depth))
+            preempt_queue_depth=args.preempt_depth,
+            resident_budget_mb=args.resident_budget_mb))
         clock = None if args.dry_run else time.monotonic
         sched = Scheduler(eng, SchedulerConfig(
             queue_capacity=args.queue_capacity, policy=args.queue_policy),
@@ -185,6 +202,10 @@ def main():
               f"{s['cache_hits']} cache hits / {s['cache_misses']} misses "
               f"({s['prefill_tokens_saved']} prefill tokens saved), "
               f"{s['preemptions']} preemptions / {s['restores']} restores")
+        print(f"  weight tier  {spec.weight_dtype or cfg.dtype} weights, "
+              f"{s['resident_weight_bytes']} resident expert bytes "
+              f"({eng._n_resident}/layer), "
+              f"{s['ddr_bytes_saved']} DDR bytes saved")
         if args.dry_run and args.preempt_depth is not None \
                 and s["preemptions"] < 1:
             raise SystemExit("preemption smoke: --preempt-depth was set "
@@ -197,19 +218,26 @@ def main():
 
     if args.dry_run:
         eng = Engine(params, cfg, ServeConfig(
-            max_batch=2, max_ctx=16, spec=spec, seed=args.seed))
+            max_batch=2, max_ctx=16, spec=spec, seed=args.seed,
+            resident_budget_mb=args.resident_budget_mb))
         eng.submit([1, 2, 3, 4], max_new=2)
         outs = eng.run(max_iterations=8)
         n = sum(len(t) for t in outs.values())
         if n < 1:
             raise SystemExit("dry-run emitted no tokens")
+        s = eng.stats
         print(f"dry-run OK: spec={eng.scfg.spec.to_json()} tokens={n}")
+        print(f"  weight tier  {spec.weight_dtype or cfg.dtype} weights, "
+              f"{s['resident_weight_bytes']} resident expert bytes "
+              f"({eng._n_resident}/layer), "
+              f"{s['ddr_bytes_saved']} DDR bytes saved")
         return
 
     eng = Engine(params, cfg, ServeConfig(
         max_batch=args.max_batch, max_ctx=args.prompt_len + args.max_new + 8,
         buffering_slack=args.slack, theta_min=args.theta_min,
-        spec=spec, seed=args.seed))
+        spec=spec, seed=args.seed,
+        resident_budget_mb=args.resident_budget_mb))
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
@@ -226,6 +254,10 @@ def main():
           f"loads_saved={s['expert_loads_saved']} "
           f"dynamic_schedules={s['dynamic_schedules']} "
           f"throughput={s['tokens_emitted']/dt:.1f} tok/s")
+    print(f"weight tier: {spec.weight_dtype or cfg.dtype} weights, "
+          f"{s['resident_weight_bytes']} resident expert bytes "
+          f"({eng._n_resident}/layer), "
+          f"{s['ddr_bytes_saved']} DDR bytes saved")
 
 
 if __name__ == "__main__":

@@ -139,6 +139,13 @@ class ServeConfig:
     moe_impl: Optional[str] = None      # deprecated: use spec
     autotune: Optional[str] = None      # deprecated: use spec.autotune
     ema_decay: float = 0.8              # LoadTracker decay (dynamic sched)
+    # EMA-hot expert weight tiering: pin each MoE layer's LoadTracker-
+    # hottest experts resident on-package under this total byte budget
+    # (split evenly across MoE layers); resident experts skip their DDR
+    # stream in the modeled clock, the trace records (``resident``), and
+    # the ``sim.modes.replay_trace`` referee.  Accounting-only — tokens
+    # are bit-identical with tiering on or off.  0 disables the tier.
+    resident_budget_mb: float = 0.0
     temperature: float = 0.0            # 0 = greedy
     seed: int = 0
 
@@ -164,6 +171,9 @@ class ServeConfig:
                 and self.preempt_queue_depth < 0:
             raise ValueError("preempt_queue_depth must be >= 0 (or None "
                              "to disable preemption)")
+        if self.resident_budget_mb < 0:
+            raise ValueError("resident_budget_mb must be >= 0 "
+                             f"(got {self.resident_budget_mb})")
 
 
 @dataclass
@@ -263,9 +273,27 @@ class Engine:
         self._layer_schedules: Dict[int, trajectory.Schedule] = {}
         self.dynamic_schedule = scfg.spec.schedule == "dynamic"
         # closed-form chiplet-array clock: modeled seconds per trace
-        # record, integrated per iteration into last_step_modeled_s
-        self.cost_model = (autotune.ServingCostModel.from_config(cfg)
-                          if cfg.moe is not None else None)
+        # record, integrated per iteration into last_step_modeled_s.
+        # The spec's streamed weight dtype feeds the clock its expert
+        # bytes-per-param so int8/fp8 runs model the smaller DDR stream.
+        from repro.kernels import quant
+        self.cost_model = (autotune.ServingCostModel.from_config(
+            cfg, weight_bytes=quant.weight_bytes(scfg.spec.weight_dtype))
+            if cfg.moe is not None else None)
+        # EMA-hot expert weight tier: the resident_budget_mb bytes split
+        # evenly over MoE layers pin this many experts per layer
+        n_moe = sum(1 for l in range(self.L)
+                    if self._layer_kind(l)[1] == "moe")
+        self._n_resident = 0
+        if scfg.resident_budget_mb > 0 and self.cost_model is not None \
+                and n_moe:
+            per_layer = int(scfg.resident_budget_mb * 2 ** 20) // n_moe
+            self._n_resident = int(min(cfg.moe.num_experts,
+                                       per_layer // self.cost_model.expert_bytes))
+        self.stats["resident_weight_bytes"] = (
+            self._n_resident * n_moe * self.cost_model.expert_bytes
+            if self.cost_model is not None else 0)
+        self.stats["ddr_bytes_saved"] = 0
         self.last_step_modeled_s = 0.0
         self._iter_modeled_s = 0.0
 
@@ -392,13 +420,43 @@ class Engine:
         return [r for r in self.requests.values()
                 if not r.done and r.phase == "prefill"]
 
+    def _resident_for(self, layer: int) -> List[int]:
+        """The layer's EMA-hot resident expert set: the ``_n_resident``
+        hottest experts by LoadTracker EMA, ties broken by expert id —
+        deterministic even before any traffic has been observed."""
+        tracker = self.load_trackers.get(layer)
+        if tracker is None or tracker.steps == 0:
+            return list(range(self._n_resident))
+        ema = np.asarray(tracker.ema, np.float64)
+        hot = sorted(range(len(ema)), key=lambda e: (-ema[e], e))
+        return sorted(hot[:self._n_resident])
+
     def _record(self, rec: dict) -> None:
         """Append one workload-trace record, stamped with its modeled
         chiplet-array seconds (the per-iteration sum becomes
-        ``last_step_modeled_s`` — the scheduler's modeled clock)."""
+        ``last_step_modeled_s`` — the scheduler's modeled clock).
+
+        With the EMA-hot weight tier on, the record also carries the
+        layer's ``resident`` expert ids; resident experts that would
+        have streamed this record skip their DDR term in the modeled
+        clock and accrue ``stats["ddr_bytes_saved"]``."""
+        resident_n = 0
+        if self._n_resident and "layer" in rec:
+            resident = self._resident_for(rec["layer"])
+            rec["resident"] = resident
+            counts = rec["counts"]
+            if rec["schedule"] == "dynamic":
+                # a dynamic trajectory already skips idle experts: only
+                # resident experts that routed tokens save a stream
+                resident_n = sum(1 for e in resident if counts[int(e)] > 0)
+            else:
+                resident_n = len(resident)  # static plan loads every expert
+            self.stats["ddr_bytes_saved"] += (resident_n
+                                              * self.cost_model.expert_bytes)
         if self.cost_model is not None:
             rec["modeled_s"] = self.cost_model.layer_s(
-                rec["counts"], dynamic=rec["schedule"] == "dynamic")
+                rec["counts"], dynamic=rec["schedule"] == "dynamic",
+                resident=resident_n)
             self._iter_modeled_s += rec["modeled_s"]
         self.trace.append(rec)
 

@@ -7,6 +7,7 @@ dies at 800 MHz (4.865 TOPS), FDI-to-FDI latency ≈ 4 ns/hop.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 
 @dataclass(frozen=True)
@@ -62,24 +63,33 @@ class ModelSpec:
     d_ff_dense: int = 0               # attention-adjacent dense FFN (e2e only)
     num_heads: int = 16
     num_shared: int = 0
+    bytes_per_param: Optional[int] = None  # streamed expert-weight bytes;
+    #   None = the hardware default (bf16).  1 models int8/fp8 streaming.
 
     @property
     def expert_bytes(self) -> int:
-        return self.n_mats * self.d_model * self.d_expert * 2
+        return self.n_mats * self.d_model * self.d_expert \
+            * (self.bytes_per_param or 2)
 
     def expert_flops_per_token(self) -> float:
         return 2.0 * self.n_mats * self.d_model * self.d_expert
 
 
-def spec_from_config(cfg) -> ModelSpec:
-    """Build a sim spec from a repro ModelConfig (must have MoE)."""
+def spec_from_config(cfg, weight_bytes: Optional[int] = None) -> ModelSpec:
+    """Build a sim spec from a repro ModelConfig (must have MoE).
+
+    ``weight_bytes`` overrides the streamed expert-weight storage width
+    (e.g. 1 for an int8/fp8 ``ExecutionSpec.weight_dtype`` run) so the
+    simulator referee and the closed-form cost model agree on DDR bytes.
+    """
     assert cfg.moe is not None
     return ModelSpec(
         name=cfg.name, d_model=cfg.d_model, d_expert=cfg.moe.d_expert,
         num_experts=cfg.moe.num_experts, top_k=cfg.moe.top_k,
         n_mats=3 if cfg.activation == "swiglu" else 2,
         num_layers=cfg.num_layers, d_ff_dense=cfg.d_ff,
-        num_heads=max(1, cfg.num_heads), num_shared=cfg.moe.num_shared_experts)
+        num_heads=max(1, cfg.num_heads), num_shared=cfg.moe.num_shared_experts,
+        bytes_per_param=weight_bytes)
 
 
 # paper Table I models for the simulator benchmarks

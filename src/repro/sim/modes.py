@@ -100,7 +100,7 @@ def simulate_mode(hw: HardwareConfig, spec: ModelSpec, mode: str,
     """
     P = hw.num_chiplets
     E, d, de = spec.num_experts, spec.d_model, spec.d_expert
-    wb = hw.bytes_per_param
+    wb = spec.bytes_per_param or hw.bytes_per_param
     ab = act_bytes if act_bytes is not None else hw.bytes_per_act
     de_loc = de / P
     n_mats = spec.n_mats
@@ -204,7 +204,8 @@ def simulate_ep(hw: HardwareConfig, spec: ModelSpec, tokens: int, *,
     dispatch_flops = 2.0 * T_loc * E * C * d * 2 + 2.0 * T_loc * d * E
     flops = 2.0 * spec.n_mats * E_loc * (P * C) * d * de + dispatch_flops
     t_comp = flops / hw.tops
-    ddr = spec.n_mats * E_loc * d * de * hw.bytes_per_param
+    ddr = spec.n_mats * E_loc * d * de \
+        * (spec.bytes_per_param or hw.bytes_per_param)
     t_ddr = ddr / (hw.ddr_total / P)
     lat = t_a2a + max(t_comp, t_ddr) + t_a2a
     return ModeResult("ep", lat, t_comp, 0.0, 2 * t_a2a, ddr * P)
@@ -212,7 +213,8 @@ def simulate_ep(hw: HardwareConfig, spec: ModelSpec, tokens: int, *,
 
 def simulate_trajectory(hw: HardwareConfig, spec: ModelSpec, counts, *,
                         order=None, padded: bool = False,
-                        capacity_factor: float = 1.25) -> float:
+                        capacity_factor: float = 1.25,
+                        resident=None) -> float:
     """Step time of one MoE layer executed as a double-buffered expert
     *flow*: DDR streams expert weights in trajectory order while the
     array computes the previously-loaded expert (paper Fig. 4/5).
@@ -231,6 +233,12 @@ def simulate_trajectory(hw: HardwareConfig, spec: ModelSpec, counts, *,
     — ``load_done(i+1)`` may run during ``compute(i)``.  Deliberately
     not the closed-form cost model, so dynamic-vs-static comparisons
     against ``core.autotune``'s load-aware predictions are meaningful.
+
+    ``resident`` is an iterable of expert ids whose weights are pinned
+    on-package by the EMA-hot weight tier (``docs/quantization.md``):
+    those experts compute without touching the DDR chain at all, so a
+    trajectory that leads with its resident experts hides the cold
+    tail's stream behind their compute.
     """
     counts = np.asarray(counts, np.float64)
     E = spec.num_experts
@@ -238,6 +246,7 @@ def simulate_trajectory(hw: HardwareConfig, spec: ModelSpec, counts, *,
     C = _capacity(max(1, int(math.ceil(tokens))), spec, capacity_factor)
     if order is None:
         order = range(E)
+    resident = frozenset(int(e) for e in resident) if resident else frozenset()
     tops = hw.tops * hw.num_chiplets
     ddr = hw.ddr_total
     t_load = spec.expert_bytes / ddr
@@ -247,8 +256,11 @@ def simulate_trajectory(hw: HardwareConfig, spec: ModelSpec, counts, *,
         rows = C if padded else min(C, counts[int(e)])
         if not padded and rows <= 0:
             continue                       # dynamic trajectory skips idle
-        load_done = load_done + t_load     # serial DDR stream
         flops = 2.0 * spec.n_mats * rows * spec.d_model * spec.d_expert
+        if int(e) in resident:
+            comp_done = comp_done + flops / tops   # no DDR stream at all
+            continue
+        load_done = load_done + t_load     # serial DDR stream
         comp_done = max(comp_done, load_done) + flops / tops
     return comp_done
 
@@ -266,6 +278,8 @@ def replay_trace(hw: HardwareConfig, spec: ModelSpec, trace, *,
     trajectory (falling back to the record's paired-load ``order``);
     static records replay the shape-only capacity-padded plan.  Records
     with no routed tokens are skipped (no expert flow, no step time).
+    Records carrying a ``resident`` list (the engine's EMA-hot weight
+    tier) skip those experts' DDR loads during replay.
     """
     total = 0.0
     for rec in trace:
@@ -274,15 +288,18 @@ def replay_trace(hw: HardwareConfig, spec: ModelSpec, trace, *,
         counts = np.asarray(rec["counts"], np.float64)
         if counts.sum() <= 0:
             continue
+        resident = rec.get("resident")
         if rec.get("schedule") == "dynamic":
             order = rec.get("trajectory")
             if order is None:
                 order = rec["order"]
             total += simulate_trajectory(hw, spec, counts, order=order,
-                                         capacity_factor=capacity_factor)
+                                         capacity_factor=capacity_factor,
+                                         resident=resident)
         else:
             total += simulate_trajectory(hw, spec, counts, padded=True,
-                                         capacity_factor=capacity_factor)
+                                         capacity_factor=capacity_factor,
+                                         resident=resident)
     return total
 
 

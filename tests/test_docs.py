@@ -27,6 +27,7 @@ DOC_PAGES = [
     "statepool.md",
     "execution-spec.md",
     "benchmarks.md",
+    "quantization.md",
 ]
 
 # [text](target) — excludes images (![...]) via the lookbehind; target is
