@@ -193,6 +193,54 @@ def check_moe_strategies(base, cur, tol, failures):
     print(f"BENCH_moe_strategies: auto={cur.get('auto_family')} "
           f"(baseline {base.get('auto_family')}), {matched} rows matched")
     check_skewed_schedules(base, cur, tol, failures)
+    check_hybrid_block(base, cur, failures)
+
+
+HYBRID_AGREE_FLOOR = 0.8
+
+
+def check_hybrid_block(base, cur, failures):
+    """Two-tier hybrid gate — active only once the committed baseline
+    carries the hybrid sweep (older baselines skip it).  Everything
+    here is deterministic host-side simulation, so no timing noise:
+    the cost model must agree with the chiplet referee on >=80% of the
+    committed sweep, the sweep must not be degenerate (hybrid, EP and
+    FSE-DP each win somewhere), and the load-aware fast-tier partition
+    must beat the static id-prefix on every skewed point."""
+    if not base.get("hybrid"):
+        return
+    hybrid = cur.get("hybrid") or {}
+    sweep = hybrid.get("sweep") or []
+    partition = hybrid.get("partition") or []
+    if not sweep:
+        failures.append("BENCH_moe_strategies[hybrid]: sweep rows "
+                        "disappeared — rerun jax_moe_strategies.py")
+        return
+    frac = sum(r["agree"] for r in sweep) / len(sweep)
+    if frac < HYBRID_AGREE_FLOOR:
+        bad = [r for r in sweep if not r["agree"]]
+        failures.append(
+            f"BENCH_moe_strategies[hybrid]: cost/sim agreement "
+            f"{frac:.0%} < {HYBRID_AGREE_FLOOR:.0%} "
+            f"({len(bad)} disagreements, first: {bad[0]})")
+    winners = {r["sim_family"] for r in sweep}
+    for fam in ("hybrid", "ep", "fse_dp"):
+        if fam not in winners:
+            failures.append(
+                f"BENCH_moe_strategies[hybrid]: {fam} wins no simulated "
+                f"sweep point (winners: {sorted(winners)}) — the "
+                f"family race is degenerate")
+    part_wins = sum(r["win"] for r in partition)
+    if part_wins < len(partition):
+        bad = [r for r in partition if not r["win"]][0]
+        failures.append(
+            f"BENCH_moe_strategies[hybrid]: dynamic partition beat the "
+            f"static top-N on only {part_wins}/{len(partition)} points "
+            f"(first loss: E={bad['E']} tokens={bad['tokens']})")
+    print(f"BENCH_moe_strategies[hybrid]: agreement {frac:.0%} over "
+          f"{len(sweep)} points (floor {HYBRID_AGREE_FLOOR:.0%}), sim "
+          f"winners {sorted(winners)}, dynamic partition wins "
+          f"{part_wins}/{len(partition)}")
 
 
 def check_skewed_schedules(base, cur, tol, failures):

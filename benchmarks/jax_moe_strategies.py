@@ -58,6 +58,79 @@ def skewed_schedule_rows():
                      "win": bool(t["dynamic"] < t["static"])})
     return rows
 
+# (E, d_expert, tokens, zipf_s) — compute-sensitive Zipf points where
+# the load-aware fast-tier partition must beat the static id-prefix
+DYN_PARTITION_SWEEP = (
+    (64, 1408, 256, 1.2), (64, 1408, 512, 1.2),
+    (64, 768, 512, 1.4), (32, 1408, 256, 1.2),
+)
+
+
+def hybrid_sweep_rows():
+    """Two-tier hybrid referee sweep (host-side, deterministic).
+
+    For every point of the committed ``strategy.HYBRID_SWEEP`` the
+    analytic family cost model picks a winner and the chiplet simulator
+    referees it; the regression gate requires >=80% agreement and each
+    of hybrid / EP / FSE-DP winning somewhere.  A second block prices
+    the dynamic (EMA-hottest) fast-tier partition against the static
+    top-N id prefix on Zipf-skewed load.
+    """
+    import numpy as np
+    from repro.configs.base import MoEConfig
+    from repro.core import autotune
+    from repro.core import strategy as strat
+    from repro.sim import hardware as hwmod
+    from repro.sim import modes as sim_modes, workload
+
+    def ndp_hw(P):
+        base = {2: hwmod.scaled(1, 2), 4: hwmod.scaled(2, 2),
+                8: hwmod.scaled(2, 4)}[P]
+        return hwmod.with_ndp(base)
+
+    sweep = []
+    for (B, S, E, de, P, zs) in strat.HYBRID_SWEEP:
+        hw = ndp_hw(P)
+        profile = autotune.HardwareProfile.from_chiplet(hw)
+        moe = MoEConfig(num_experts=E, top_k=2, d_expert=de)
+        loads = None
+        if zs > 0:
+            rng = np.random.default_rng(0)
+            loads = workload.sample_expert_probs(E, rng, zipf_s=zs)
+        lt = None if loads is None else tuple(float(v) for v in loads)
+        costs = strat.family_costs(B, S, 512, moe, "swiglu", P,
+                                   profile=profile, load=lt)
+        chosen = strat.pick_family(costs)
+        sim = sim_modes.rank_families(
+            hw, hwmod.ModelSpec("s", 512, de, E, 2), B * S, B=B, S=S,
+            loads=loads)
+        best = min((f for f in strat.FAMILIES if f in sim),
+                   key=lambda f: sim[f])
+        sweep.append({"B": B, "S": S, "E": E, "d_expert": de, "P": P,
+                      "zipf_s": zs, "cost_family": chosen,
+                      "sim_family": best, "sim_us": sim[best] * 1e6,
+                      "agree": bool(chosen == best)})
+
+    hw = ndp_hw(4)
+    partition = []
+    for (E, de, tokens, zs) in DYN_PARTITION_SWEEP:
+        spec = hwmod.ModelSpec("s", 512, de, E, 2)
+        rng = np.random.default_rng(7)
+        loads = workload.sample_expert_probs(E, rng, zipf_s=zs)
+        N = strat.default_hot(E)
+        static = sim_modes.simulate_hybrid(
+            hw, spec, tokens, loads=loads, hot_ids=range(N)).latency
+        dyn_ids = np.argsort(-loads, kind="stable")[:N]
+        dynamic = sim_modes.simulate_hybrid(
+            hw, spec, tokens, loads=loads, hot_ids=dyn_ids).latency
+        partition.append({"E": E, "d_expert": de, "tokens": tokens,
+                          "zipf_s": zs, "hot_n": N,
+                          "static_us": static * 1e6,
+                          "dynamic_us": dynamic * 1e6,
+                          "win": bool(dynamic < static)})
+    return {"sweep": sweep, "partition": partition}
+
+
 _CHILD = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -158,6 +231,19 @@ def run():
     print(f"# skewed gating: dynamic schedule wins {wins}/{len(skewed)} "
           f"points")
 
+    hybrid = hybrid_sweep_rows()
+    emit("jax_moe_strategies_hybrid",
+         [[r["B"], r["S"], r["E"], r["d_expert"], r["P"], r["zipf_s"],
+           r["cost_family"], r["sim_family"], int(r["agree"])]
+          for r in hybrid["sweep"]],
+         ["B", "S", "E", "d_expert", "P", "zipf_s", "cost_family",
+          "sim_family", "agree"])
+    n_agree = sum(r["agree"] for r in hybrid["sweep"])
+    part_wins = sum(r["win"] for r in hybrid["partition"])
+    print(f"# hybrid two-tier: cost/sim agreement "
+          f"{n_agree}/{len(hybrid['sweep'])}, dynamic partition wins "
+          f"{part_wins}/{len(hybrid['partition'])}")
+
     import jax
     payload = {
         "bench": "jax_moe_strategies",
@@ -168,6 +254,7 @@ def run():
         "shape": data["shape"],
         "rows": data["rows"],
         "skewed": skewed,
+        "hybrid": hybrid,
     }
     os.makedirs(ART, exist_ok=True)
     path = os.path.join(ART, "BENCH_moe_strategies.json")

@@ -94,18 +94,25 @@ class HardwareProfile:
     link_bw: float             # D2D/ICI bytes/s per device (ring neighbor)
     link_latency: float        # seconds per ring hop (collective issue cost)
     vmem_bytes: int            # fast-memory budget for one kernel working set
+    # optional near-memory compute tier (HardwareConfig.ndp) — tier
+    # totals; None/0.0 = homogeneous hardware, hybrid pricing inert
+    ndp_flops: Optional[float] = None
+    ndp_bw: float = 0.0
 
     @classmethod
     def from_chiplet(cls, hw=None) -> "HardwareProfile":
         """Derive from the chiplet simulator's HardwareConfig (Table I)."""
         if hw is None:
             from repro.sim.hardware import PROTOTYPE_2X2 as hw
+        ndp = getattr(hw, "ndp", None)
         return cls(name=f"chiplet-{hw.rows}x{hw.cols}",
                    peak_flops=hw.tops,
                    mem_bw=hw.ddr_total / hw.num_chiplets,
                    link_bw=hw.d2d_gbps,
                    link_latency=hw.d2d_hop_latency,
-                   vmem_bytes=hw.buffer_bytes)
+                   vmem_bytes=hw.buffer_bytes,
+                   ndp_flops=None if ndp is None else ndp.tops,
+                   ndp_bw=0.0 if ndp is None else ndp.gbps)
 
     @classmethod
     def from_chiplet_array(cls, hw=None) -> "HardwareProfile":
@@ -117,12 +124,15 @@ class HardwareProfile:
         construction (pure Table-I constants, never detected)."""
         if hw is None:
             from repro.sim.hardware import PROTOTYPE_2X2 as hw
+        ndp = getattr(hw, "ndp", None)
         return cls(name=f"chiplet-array-{hw.rows}x{hw.cols}",
                    peak_flops=hw.tops * hw.num_chiplets,
                    mem_bw=hw.ddr_total,
                    link_bw=hw.d2d_gbps,
                    link_latency=hw.d2d_hop_latency,
-                   vmem_bytes=hw.buffer_bytes)
+                   vmem_bytes=hw.buffer_bytes,
+                   ndp_flops=None if ndp is None else ndp.tops,
+                   ndp_bw=0.0 if ndp is None else ndp.gbps)
 
     @classmethod
     def from_tpu(cls) -> "HardwareProfile":
@@ -169,6 +179,7 @@ class Plan:
     vmem_bytes: int = 0
     per_mode_s: Tuple[Tuple[str, float], ...] = ()
     source: str = "analytic"           # analytic | measured | fallback | forced
+    hot_experts: Optional[int] = None  # hybrid family: fast-tier expert count
 
     def kernel_opts(self) -> Dict[str, int]:
         """kwargs for ``kernels.ops.streamed_moe`` (only non-defaults)."""
@@ -320,15 +331,23 @@ class ServingCostModel:
         return int(self.n_mats * self.d_model * self.d_expert * wb)
 
     def layer_s(self, counts, *, dynamic: bool = False,
-                resident: int = 0) -> float:
+                resident: int = 0, hot=None) -> float:
         """Modeled seconds for one layer's observed expert counts.
 
         ``resident`` is the number of would-be-loaded experts whose
         weights are pinned on-package (EMA-hot tiering): they skip
-        their DDR stream term."""
+        their DDR stream term.  ``hot`` is the hybrid strategy's
+        fast-tier expert-id set: on a two-tier profile
+        (``profile.ndp_flops``) the layer prices as
+        ``max(fast flow over hot, near-memory in-place over cold)``;
+        on homogeneous hardware the partition is placement-only and
+        ``hot`` is ignored (every expert still streams)."""
         total = float(sum(float(c) for c in counts))
         tokens = max(1, math.ceil(total / max(1, self.top_k)))
         C = _cap(tokens, self.top_k, self.num_experts, self.capacity_factor)
+        if hot is not None and self.profile.ndp_flops and self.profile.ndp_bw:
+            return self._hybrid_tiers_s(counts, C, frozenset(
+                int(e) for e in hot), dynamic and total > 0)
         load = None
         if dynamic and total > 0:
             load = tuple(float(c) / total for c in counts)
@@ -337,6 +356,40 @@ class ServingCostModel:
             total, self.profile, dtype_bytes=self.dtype_bytes,
             weight_bytes=self.weight_bytes, resident=resident,
             load=load)["total_s"]
+
+    def _hybrid_tiers_s(self, counts, C: int, hotset: frozenset,
+                        dynamic: bool) -> float:
+        """Two-tier pricing against the aggregate array profile: the hot
+        tier is the usual streaming flow (fill + overlapped compute/DDR
+        chains), the cold tier executes in place near memory plus a
+        token shuttle over D2D; the layer is their ``max``."""
+        p = self.profile
+        eb = float(self.expert_bytes)
+        fl = 2.0 * self.n_mats * self.d_model * self.d_expert
+        hot_rows = cold_rows = 0.0
+        hot_active = cold_active = 0
+        for e in range(self.num_experts):
+            r = min(float(C), float(counts[e])) if dynamic else float(C)
+            if dynamic and r < 0.5:
+                continue
+            if e in hotset:
+                hot_rows += r
+                hot_active += 1
+            else:
+                cold_rows += r
+                cold_active += 1
+        t_hot = 0.0
+        if hot_active:
+            t_fill = eb / p.mem_bw
+            t_hot = t_fill + max(hot_rows * fl / p.peak_flops,
+                                 hot_active * eb / p.mem_bw - t_fill)
+        t_cold = 0.0
+        if cold_active:
+            t_cold = max(cold_rows * fl / p.ndp_flops,
+                         cold_active * eb / p.ndp_bw) \
+                + 2.0 * cold_rows * self.d_model * self.dtype_bytes \
+                / p.link_bw
+        return max(t_hot, t_cold)
 
 
 def feasible_modes(B: int, S: int, P: int) -> Tuple[str, ...]:
@@ -482,6 +535,98 @@ def ep_cost(B: int, S: int, d: int, E: int, de: int, top_k: int, cf: float,
     return {"total_s": total, "compute_s": t_comp, "hbm_s": t_hbm,
             "a2a_s": t_a2a, "a2a_bytes": a2a_bytes,
             "flops": expert_flops + dispatch_flops, "capacity": C}
+
+
+def hybrid_cost(B: int, S: int, d: int, E: int, de: int, top_k: int,
+                cf: float, n_mats: int, P: int, profile: HardwareProfile,
+                dtype_bytes: int = 2,
+                load: Optional[Tuple[float, ...]] = None,
+                weight_bytes: Optional[int] = None,
+                hot_n: Optional[int] = None) -> Dict[str, float]:
+    """Predicted seconds for one MoE layer under two-tier hot/cold
+    placement (the ``hybrid`` family): *hot* experts stream through the
+    fast chiplet array as the usual double-buffered expert flow, *cold*
+    experts execute in place on the near-memory tier
+    (``profile.ndp_flops`` / ``ndp_bw``), and the layer finishes at
+    ``max(tier_fast, tier_ndp)`` — the HD-MoE / GPU-NDP operating
+    point.  Closed-form twin of ``sim.modes.simulate_hybrid`` (the
+    discrete referee); rank agreement between the two is asserted, not
+    assumed (tests/test_hybrid.py).
+
+    Global hot/cold placement is not aligned with any token sharding,
+    so routing + capacity dispatch run un-sharded on ONE fast die
+    before the tiers start — the centralization tax that keeps FSE-DP
+    competitive at prefill.  The hot set is a prefix of the
+    load-descending expert order: ``hot_n`` pins its size (static
+    top-N baseline, or the engine's EMA partition width); ``None``
+    sweeps every prefix and keeps the best — the idealized dynamic
+    repartition.  ``load`` / ``weight_bytes`` as in :func:`mode_cost`.
+    """
+    if not profile.ndp_flops or not profile.ndp_bw:
+        raise ValueError("hybrid_cost needs a near-memory tier "
+                         "(HardwareProfile.ndp_flops / ndp_bw)")
+    T = B * S
+    ab = dtype_bytes
+    wb = dtype_bytes if weight_bytes is None else weight_bytes
+    eb = float(n_mats * d * de * wb)
+    C = _cap(T, top_k, E, cf)
+    if load is None:
+        rows_desc = [float(C)] * E
+    else:
+        rows_desc = sorted((min(float(C), T * top_k * float(s))
+                            for s in load), reverse=True)
+    pref_rows = [0.0]
+    pref_active = [0]
+    for r in rows_desc:                 # prefix sums, load-descending
+        act = load is None or r >= 0.5
+        pref_rows.append(pref_rows[-1] + (r if act else 0.0))
+        pref_active.append(pref_active[-1] + int(act))
+    tot_rows, tot_active = pref_rows[-1], pref_active[-1]
+
+    dispatch_flops = 2.0 * T * E * C * d * 2 + 2.0 * T * d * E
+    t_dispatch = dispatch_flops / profile.peak_flops   # one die, un-sharded
+    ddr_bw = P * profile.mem_bw                        # array-total DDR
+
+    def _tiers(H: int) -> Tuple[float, float, float]:
+        hot_rows, hot_active = pref_rows[H], pref_active[H]
+        cold_rows = tot_rows - hot_rows
+        cold_active = tot_active - pref_active[H]
+        t_hot = 0.0
+        if hot_active:
+            # expert flow: exposed first load + ring broadcast, then
+            # compute / DDR / ring chains overlap (double-buffered)
+            t_fill = eb / ddr_bw \
+                + (P - 1) * (eb / (P * profile.link_bw)
+                             + profile.link_latency)
+            t_comp = 2.0 * n_mats * hot_rows * d * de \
+                / (P * profile.peak_flops)
+            t_ddr = hot_active * eb / ddr_bw
+            t_ring = hot_active * eb * (P - 1) / (P * profile.link_bw) \
+                + hot_active * (P - 1) * profile.link_latency
+            t_hot = t_fill + max(t_comp, t_ddr - t_fill, t_ring - t_fill)
+        t_cold = 0.0
+        if cold_active:
+            # in-place near-memory execution + token shuttle over D2D
+            t_cold = max(2.0 * n_mats * cold_rows * d * de
+                         / profile.ndp_flops,
+                         cold_active * eb / profile.ndp_bw)
+            t_cold += 2.0 * cold_rows * d * ab / profile.link_bw \
+                + 2.0 * profile.link_latency
+        return max(t_hot, t_cold), t_hot, t_cold
+
+    if hot_n is not None:
+        best_H = max(0, min(E, int(hot_n)))
+        best, t_hot, t_cold = _tiers(best_H)
+    else:
+        best = t_hot = t_cold = None
+        best_H = 0
+        for H in range(E + 1):
+            t, th, tc = _tiers(H)
+            if best is None or t < best:
+                best, t_hot, t_cold, best_H = t, th, tc, H
+    return {"total_s": t_dispatch + best, "dispatch_s": t_dispatch,
+            "hot_s": t_hot, "cold_s": t_cold, "hot_n": float(best_H),
+            "capacity": C, "rows": tot_rows, "active": float(tot_active)}
 
 
 def _micro_candidates(de_loc: int, configured: int) -> List[int]:

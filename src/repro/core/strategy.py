@@ -18,11 +18,13 @@ string ``impl`` names:
   dataflow (ring stream, all-to-all, psum, capacity gather);
 * a named **registry** (:func:`register` / :func:`get_strategy`):
   ``fse_dp`` (the paper's expert streaming), ``ep`` / ``tp`` (the
-  baselines), ``capacity`` / ``dense`` (single-device paths), and
-  ``auto`` — a cross-family planner that scores the EP and TP cost
-  curves *alongside* the three FSE-DP modes so the winning family, not
-  just the winning FSE-DP mode, is picked per shape (validated against
-  ``sim.modes.rank_families``);
+  baselines), ``capacity`` / ``dense`` (single-device paths),
+  ``hybrid`` (two-tier hot/cold placement on heterogeneous hardware
+  with a near-memory tier), and ``auto`` — a cross-family planner that
+  scores the EP and TP cost curves *alongside* the three FSE-DP modes
+  (and ``hybrid`` when the profile has an NDP tier) so the winning
+  family, not just the winning FSE-DP mode, is picked per shape
+  (validated against ``sim.modes.rank_families``);
 * :class:`ExecutionSpec` — a frozen, JSON-round-trippable configuration
   object (strategy name, per-phase and per-layer overrides, autotune
   level, kernels on/off, sorted dispatch) that replaces ``moe.impl``
@@ -52,8 +54,19 @@ PHASES = ("train", "prefill", "decode")
 
 # cross-family candidates of the ``auto`` planner, in tie-break priority
 # order (ties go to the earlier family — deterministic, mirrored by the
-# simulator referee ``sim.modes.rank_families``)
-FAMILIES = ("fse_dp", "ep", "tp")
+# simulator referee ``sim.modes.rank_families``).  BASE_FAMILIES race on
+# any hardware; ``hybrid`` (two-tier hot/cold placement) joins only when
+# the profile carries a near-memory tier (``HardwareProfile.ndp_flops``),
+# appended last so the homogeneous trio keeps its tie-break priority.
+BASE_FAMILIES = ("fse_dp", "ep", "tp")
+FAMILIES = BASE_FAMILIES + ("hybrid",)
+
+
+def default_hot(E: int) -> int:
+    """Fast-tier expert count when nothing better is known: the top
+    quartile of experts by load (≥1) — the static top-N baseline the
+    dynamic EMA repartition is measured against."""
+    return max(1, E // 4)
 
 # (B, S, E, d_expert, P) cross-family validation sweep shared by
 # tests/test_strategy.py and benchmarks: tiny-token shapes where TP
@@ -69,6 +82,23 @@ FAMILY_SWEEP: Tuple[Tuple[int, int, int, int, int], ...] = (
     (1, 128, 16, 512, 4),
     (4, 512, 12, 512, 8), (1, 512, 12, 768, 8), (2, 1024, 18, 512, 4),
     (2, 2048, 18, 768, 4),
+)
+
+# (B, S, E, d_expert, P, zipf_s) two-tier validation sweep on NDP
+# hardware (``sim.hardware.with_ndp(scaled(...))``), shared by
+# tests/test_hybrid.py and benchmarks/jax_moe_strategies.py: low-batch
+# decode where offloading cold experts near memory wins (hybrid),
+# batch-heavy decode where the token all-to-all wins (ep), and long
+# prefill where hybrid's un-sharded dispatch tax bites (fse_dp).  Each
+# of hybrid/ep/fse_dp wins at least one point; zipf_s > 0 points load
+# the race with a rank-permuted Zipf vector (``sim.workload``, seed 0).
+HYBRID_SWEEP: Tuple[Tuple[int, int, int, int, int, float], ...] = (
+    (1, 1, 64, 1408, 4, 1.2), (4, 1, 64, 1408, 4, 1.2),
+    (2, 1, 128, 768, 4, 1.2), (32, 1, 16, 512, 4, 0.0),
+    (1, 2, 64, 256, 8, 1.2), (16, 1, 8, 1024, 2, 0.0),
+    (512, 1, 32, 256, 8, 0.0), (1024, 2, 64, 256, 8, 1.2),
+    (4, 512, 16, 512, 4, 0.0),
+    (2, 1024, 18, 512, 4, 0.0), (2, 2048, 18, 768, 4, 1.2),
 )
 
 
@@ -408,6 +438,10 @@ def family_costs(B: int, S: int, d_model: int, moe: MoEConfig,
                                    n_mats, P, profile, 1,
                                    dtype_bytes, load,
                                    weight_bytes)["total_s"]
+    if profile.ndp_flops and profile.ndp_bw:
+        out["hybrid"] = autotune.hybrid_cost(
+            B, S, d_model, E, de, k, cf, n_mats, P, profile,
+            dtype_bytes, load, weight_bytes)["total_s"]
     return out
 
 
@@ -443,6 +477,15 @@ def _plan_family_cached(B: int, S: int, d_model: int, moe: MoEConfig,
                                  weight_bytes=weight_bytes)
         return dataclasses.replace(plan, per_mode_s=plan.per_mode_s
                                    + per_family)
+    if family == "hybrid":
+        c = autotune.hybrid_cost(
+            B, S, d_model, moe.num_experts, moe.d_expert, moe.top_k,
+            moe.capacity_factor, 3 if activation == "swiglu" else 2, P,
+            profile or HardwareProfile.detect(), dtype_bytes, load,
+            weight_bytes)
+        return Plan(mode="hybrid", family="hybrid", micro_slices=1,
+                    predicted_s=costs["hybrid"], per_mode_s=per_family,
+                    source="analytic", hot_experts=int(c["hot_n"]))
     return Plan(mode=family, family=family, micro_slices=1,
                 predicted_s=costs[family], per_mode_s=per_family,
                 source="analytic")
@@ -601,6 +644,58 @@ class TpStrategy:
         from repro.core import baselines
         return baselines.moe_tp(params, x, moe, activation, axis=axis,
                                 routing=routing, schedule=schedule)
+
+
+@register("hybrid")
+class HybridStrategy(_SingleDevice):
+    """Two-tier hot/cold placement: hot experts stream through the fast
+    chiplet array, cold experts execute in place on the near-memory tier
+    (``HardwareConfig.ndp``); the layer finishes at ``max`` of the
+    tiers.  The tier split is a *placement* decision — it changes where
+    experts run, never the result — so execution partitions the expert
+    trajectory into a hot prefix and a cold tail and is bit-identical
+    to the single-tier capacity path (tests/test_hybrid.py)."""
+
+    def plan(self, ctx: StrategyContext) -> Plan:
+        profile = ctx.profile or HardwareProfile.detect()
+        E = ctx.moe.num_experts
+        if not (profile.ndp_flops and profile.ndp_bw):
+            # homogeneous hardware: placement-only plan, static top-N
+            return Plan(mode="hybrid", family="hybrid", micro_slices=1,
+                        source="fallback", hot_experts=default_hot(E))
+        n_mats = 3 if ctx.activation == "swiglu" else 2
+        c = autotune.hybrid_cost(ctx.B, ctx.S, ctx.d_model, E,
+                                 ctx.moe.d_expert, ctx.moe.top_k,
+                                 ctx.moe.capacity_factor, n_mats, ctx.P,
+                                 profile, ctx.dtype_bytes, ctx.load,
+                                 ctx.weight_bytes)
+        return Plan(mode="hybrid", family="hybrid", micro_slices=1,
+                    predicted_s=c["total_s"], source="analytic",
+                    hot_experts=int(c["hot_n"]))
+
+    def execute(self, params, x, moe, activation, plan=None, *,
+                axis="model", routing=None, schedule=None):
+        from repro.parallel import meshctx
+        mesh = meshctx.get_mesh()
+        if mesh is not None and axis in mesh.axis_names \
+                and mesh.shape[axis] > 1:
+            # under a model mesh the hot tier's flow IS the FSE-DP ring;
+            # the tier split doesn't map to an SPMD axis, so delegate
+            return get_strategy("fse_dp").execute(
+                params, x, moe, activation, None, axis=axis,
+                routing=routing, schedule=schedule)
+        from repro.core import gating
+        from repro.models import moe as moe_mod
+        x2d, routing = self.route(params, x, moe, routing)
+        if plan is None and schedule is not None:
+            plan = schedule.plan
+        H = plan.hot_experts if plan is not None \
+            and plan.hot_experts is not None \
+            else default_hot(moe.num_experts)
+        y = moe_mod.moe_hybrid(params, x2d, routing, moe, activation,
+                               hot_experts=H, schedule=schedule)
+        return (y.reshape(x.shape),
+                gating.aux_load_balance_loss(routing, moe.num_experts))
 
 
 @register("auto")

@@ -24,7 +24,8 @@ prompts, ``diurnal`` arrival bursts).
 
 MoE execution is configured by a single :class:`ExecutionSpec`
 (``repro.core.strategy``): ``--strategy`` names a registered strategy
-(fse_dp / ep / tp / capacity / dense / auto), ``--moe-spec path.json``
+(fse_dp / ep / tp / hybrid / capacity / dense / auto), ``--moe-spec
+path.json``
 loads a full spec (per-phase + per-layer overrides, autotune level,
 kernels/dispatch toggles); ``--autotune`` overrides the spec's level.
 ``--dry-run`` validates the spec (JSON round-trip + registry lookup) and
@@ -68,7 +69,8 @@ def main():
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--strategy", default=None,
                     help="MoE execution strategy (registry name: fse_dp, "
-                         "ep, tp, capacity, dense, auto); default capacity")
+                         "ep, tp, hybrid, capacity, dense, auto); "
+                         "default capacity")
     ap.add_argument("--moe-spec", default=None,
                     help="path to an ExecutionSpec JSON (see "
                          "examples/moe-spec.json); --strategy overrides "
@@ -99,6 +101,12 @@ def main():
                          "experts by LoadTracker EMA); resident experts "
                          "skip their DDR stream in the modeled clock and "
                          "trace. 0 disables the tier")
+    ap.add_argument("--hot-experts", type=int, default=None,
+                    help="hybrid two-tier placement: fast-tier expert "
+                         "count per MoE layer (default: top quartile, "
+                         "strategy.default_hot); the engine repartitions "
+                         "per iteration off the LoadTracker EMA and "
+                         "records the hot ids in the trace")
     ap.add_argument("--dry-run", action="store_true",
                     help="validate the spec (JSON round-trip + registry) "
                          "and exercise one tiny request, then exit "
@@ -174,7 +182,8 @@ def main():
             chunk_tokens=args.chunk_tokens, spec=spec, seed=args.seed,
             page_size=args.page_size, prefix_cache=args.prefix_cache,
             preempt_queue_depth=args.preempt_depth,
-            resident_budget_mb=args.resident_budget_mb))
+            resident_budget_mb=args.resident_budget_mb,
+            hot_experts=args.hot_experts))
         clock = None if args.dry_run else time.monotonic
         sched = Scheduler(eng, SchedulerConfig(
             queue_capacity=args.queue_capacity, policy=args.queue_policy),
@@ -219,7 +228,8 @@ def main():
     if args.dry_run:
         eng = Engine(params, cfg, ServeConfig(
             max_batch=2, max_ctx=16, spec=spec, seed=args.seed,
-            resident_budget_mb=args.resident_budget_mb))
+            resident_budget_mb=args.resident_budget_mb,
+            hot_experts=args.hot_experts))
         eng.submit([1, 2, 3, 4], max_new=2)
         outs = eng.run(max_iterations=8)
         n = sum(len(t) for t in outs.values())
@@ -237,7 +247,8 @@ def main():
         max_batch=args.max_batch, max_ctx=args.prompt_len + args.max_new + 8,
         buffering_slack=args.slack, theta_min=args.theta_min,
         spec=spec, seed=args.seed,
-        resident_budget_mb=args.resident_budget_mb))
+        resident_budget_mb=args.resident_budget_mb,
+        hot_experts=args.hot_experts))
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()

@@ -159,6 +159,76 @@ def moe_capacity(params, x2d, routing, moe: MoEConfig, activation,
 
 
 # ---------------------------------------------------------------------------
+# hybrid two-tier dispatch — hot prefix on the fast array, cold tail near
+# memory.  The tier split is placement only: the expert axis is a pure
+# batch axis of the grouped FFN, so computing it as two groups (and on
+# real two-tier hardware, two *places*) is bit-identical to one group.
+# ---------------------------------------------------------------------------
+
+
+def _expert_ffn_tiered(params, xe, activation, hot):
+    """(E,C,d) -> (E,C,d) fp32 computed as a hot prefix + cold tail.
+
+    ``hot`` is the fast-tier expert count H over the (already
+    trajectory-ordered) expert axis: rows ``[:H]`` model the chiplet
+    array's streamed flow, rows ``[H:]`` the near-memory tier.  Each
+    group runs the same grouped-FFN dispatch layer; per-expert compute
+    is independent and the kernel's tile choice is E-invariant, so the
+    split never changes values (tests/test_hybrid.py)."""
+    E = xe.shape[0]
+    H = max(0, min(int(hot), E))
+    if H in (0, E):
+        return _expert_ffn(params, xe, activation)
+
+    def _slice(a, b):
+        return {k: (v[a:b] if k in ("w_gate", "w_up", "w_down") else v)
+                for k, v in params.items()}
+
+    y_hot = _expert_ffn(_slice(0, H), xe[:H], activation)
+    y_cold = _expert_ffn(_slice(H, E), xe[H:], activation)
+    return jnp.concatenate([y_hot, y_cold], axis=0)
+
+
+def moe_hybrid(params, x2d, routing, moe: MoEConfig, activation, *,
+               hot_experts, schedule=None):
+    """Capacity dispatch -> two-tier grouped FFN -> combine.
+
+    Experts are reindexed into load-descending order (the host EMA load
+    when a schedule carries one, else this call's own routing counts,
+    derived in-graph so the fused serving steps never retrace), the
+    hottest ``hot_experts`` form the fast-tier prefix, and canonical
+    order is restored before the combine — outputs are bit-identical to
+    ``moe_capacity`` on the same routing."""
+    from repro.core import trajectory
+    T, d = x2d.shape
+    E = moe.num_experts
+    C = capacity_of(T, moe)
+    if schedule is not None and schedule.load is not None:
+        import numpy as np
+        order = jnp.asarray(
+            np.argsort(-np.asarray(schedule.load), kind="stable"),
+            jnp.int32)
+    else:
+        counts = gating.expert_token_counts(routing)
+        order = jnp.argsort(-jnp.asarray(counts), stable=True) \
+            .astype(jnp.int32)
+    p = _reorder_experts(params, order)
+    if sorted_dispatch_enabled():
+        idx, wts = dispatch_tables(routing, T, E, C)
+        xe = gather_dispatch(x2d, jnp.take(idx, order, axis=0))     # (E,C,d)
+        ye = _expert_ffn_tiered(p, xe, activation, hot_experts)
+        ye = trajectory.restore_order(order, ye)
+        return scatter_combine(ye, idx, wts, T)
+    dispatch, combine = dispatch_masks(routing, T, E, C)
+    xe = jnp.einsum("tec,td->ecd", dispatch.astype(x2d.dtype), x2d)  # (E,C,d)
+    (xe,) = trajectory.apply_order(order, xe)
+    ye = _expert_ffn_tiered(p, xe, activation, hot_experts)          # fp32
+    ye = trajectory.restore_order(order, ye)
+    return jnp.einsum("tec,ecd->td", combine.astype(jnp.float32),
+                      ye).astype(x2d.dtype)
+
+
+# ---------------------------------------------------------------------------
 # sorted dispatch — gather/scatter instead of one-hot einsums
 #
 # The one-hot dispatch/combine einsums cost O(T·E·C·d) MXU flops (3-4x the

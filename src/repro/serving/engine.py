@@ -146,6 +146,14 @@ class ServeConfig:
     # the ``sim.modes.replay_trace`` referee.  Accounting-only — tokens
     # are bit-identical with tiering on or off.  0 disables the tier.
     resident_budget_mb: float = 0.0
+    # hybrid two-tier placement: fast-tier expert count per MoE layer
+    # when the spec uses the ``hybrid`` strategy (None = the registry
+    # default, ``strategy.default_hot`` — top quartile).  The engine
+    # repartitions per iteration off each layer's LoadTracker EMA and
+    # records the partition in the trace (``hot`` ids, like
+    # ``resident``); on homogeneous hardware the partition is
+    # placement-only and tokens are bit-identical either way.
+    hot_experts: Optional[int] = None
     temperature: float = 0.0            # 0 = greedy
     seed: int = 0
 
@@ -294,6 +302,18 @@ class Engine:
             self._n_resident * n_moe * self.cost_model.expert_bytes
             if self.cost_model is not None else 0)
         self.stats["ddr_bytes_saved"] = 0
+        # hybrid two-tier placement: per-iteration hot/cold repartition
+        # off the LoadTracker EMA, recorded per trace record (``hot``)
+        self._n_hot = 0
+        if cfg.moe is not None \
+                and "hybrid" in scfg.spec.strategies_used():
+            from repro.core.strategy import default_hot
+            self._n_hot = int(scfg.hot_experts
+                              if scfg.hot_experts is not None
+                              else default_hot(cfg.moe.num_experts))
+            self._n_hot = max(1, min(cfg.moe.num_experts, self._n_hot))
+        self._last_hot: Dict[int, Tuple[int, ...]] = {}
+        self.stats["hybrid_repartitions"] = 0
         self.last_step_modeled_s = 0.0
         self._iter_modeled_s = 0.0
 
@@ -431,6 +451,17 @@ class Engine:
         hot = sorted(range(len(ema)), key=lambda e: (-ema[e], e))
         return sorted(hot[:self._n_resident])
 
+    def _hot_for(self, layer: int) -> List[int]:
+        """The layer's hybrid fast-tier expert set: the ``_n_hot``
+        hottest experts by LoadTracker EMA (ties to the lower id) —
+        identity prefix before any traffic, like ``_resident_for``."""
+        tracker = self.load_trackers.get(layer)
+        if tracker is None or tracker.steps == 0:
+            return list(range(self._n_hot))
+        ema = np.asarray(tracker.ema, np.float64)
+        hot = sorted(range(len(ema)), key=lambda e: (-ema[e], e))
+        return sorted(hot[:self._n_hot])
+
     def _record(self, rec: dict) -> None:
         """Append one workload-trace record, stamped with its modeled
         chiplet-array seconds (the per-iteration sum becomes
@@ -439,7 +470,10 @@ class Engine:
         With the EMA-hot weight tier on, the record also carries the
         layer's ``resident`` expert ids; resident experts that would
         have streamed this record skip their DDR term in the modeled
-        clock and accrue ``stats["ddr_bytes_saved"]``."""
+        clock and accrue ``stats["ddr_bytes_saved"]``.  With the
+        ``hybrid`` strategy, it carries the fast-tier ``hot`` ids —
+        the dynamic EMA repartition the two-tier replay referee
+        (``sim.modes.replay_trace``) and the modeled clock price."""
         resident_n = 0
         if self._n_resident and "layer" in rec:
             resident = self._resident_for(rec["layer"])
@@ -453,10 +487,18 @@ class Engine:
                 resident_n = len(resident)  # static plan loads every expert
             self.stats["ddr_bytes_saved"] += (resident_n
                                               * self.cost_model.expert_bytes)
+        hot = None
+        if self._n_hot and "layer" in rec:
+            hot = self._hot_for(rec["layer"])
+            rec["hot"] = hot
+            prev = self._last_hot.get(rec["layer"])
+            if prev is not None and prev != tuple(hot):
+                self.stats["hybrid_repartitions"] += 1
+            self._last_hot[rec["layer"]] = tuple(hot)
         if self.cost_model is not None:
             rec["modeled_s"] = self.cost_model.layer_s(
                 rec["counts"], dynamic=rec["schedule"] == "dynamic",
-                resident=resident_n)
+                resident=resident_n, hot=hot)
             self._iter_modeled_s += rec["modeled_s"]
         self.trace.append(rec)
 
@@ -807,8 +849,15 @@ class Engine:
                "schedule": "dynamic" if self.dynamic_schedule else "static"}
         if self.dynamic_schedule:
             # build the EMA schedule once; the expert execution that
-            # follows (next segment / _apply_moe) runs along it
-            sched = tracker.schedule()
+            # follows (next segment / _apply_moe) runs along it.  Under
+            # the hybrid strategy the plan carries the engine's fast-tier
+            # width so the executed partition matches the trace's ``hot``
+            plan = None
+            if self._n_hot:
+                plan = autotune.Plan(mode="hybrid", family="hybrid",
+                                     micro_slices=1,
+                                     hot_experts=self._n_hot)
+            sched = tracker.schedule(plan=plan)
             self._layer_schedules[layer] = sched
             rec["trajectory"] = list(sched.order)
         self._record(rec)
@@ -880,7 +929,8 @@ class Engine:
         snap = (statepool.snapshot_ssm(self.caches, r.slot)
                 if self._has_ssm else ())
         handle = statepool.PreemptedState(
-            request=r, page_ids=self.pool.detach_slot(r.slot),
+            request=r,
+            page_ids=self.pool.detach_slot(r.slot, has_ssm=snap != ()),
             cache_len=int(self.cache_len[r.slot]), ssm=snap)
         del self.requests[rid]
         self.free_slots.append(r.slot)
@@ -899,7 +949,8 @@ class Engine:
         r = handle.request
         slot = self.free_slots.popleft()
         r.slot = slot
-        self.pool.attach_pages(slot, handle.page_ids)
+        self.pool.attach_pages(slot, handle.page_ids,
+                               has_ssm=handle.ssm != ())
         self.cache_len[slot] = handle.cache_len
         if handle.ssm != ():
             self.caches = statepool.restore_ssm(self.caches, handle.ssm,

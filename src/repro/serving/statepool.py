@@ -302,17 +302,26 @@ class StatePool:
     # preemption
     # ------------------------------------------------------------------
 
-    def detach_slot(self, slot: int) -> List[int]:
+    def detach_slot(self, slot: int, *, has_ssm: bool = False) -> List[int]:
         """Transfer the slot row's page ownership to a preemption handle
-        (no refcount change — the handle now holds the row's refs)."""
+        (no refcount change — the handle now holds the row's refs).
+
+        ``has_ssm`` marks a handle that actually snapshots SSM state
+        (hybrid/Mamba2 models): only those hold an off-slot SSM row.
+        A pure-attention preemption must not inflate the SSM-row
+        accounting (and with it ``resident_state_bytes``)."""
         ids = self.slot_pages[slot]
         self.slot_pages[slot] = []
-        self._ssm_rows_held += 1
+        if has_ssm:
+            self._ssm_rows_held += 1
         self._account()
         return ids
 
-    def attach_pages(self, slot: int, page_ids: List[int]) -> None:
-        """Re-attach a preemption handle's pages to a (fresh) slot row."""
+    def attach_pages(self, slot: int, page_ids: List[int], *,
+                     has_ssm: bool = False) -> None:
+        """Re-attach a preemption handle's pages to a (fresh) slot row.
+        ``has_ssm`` as in :meth:`detach_slot` — releases the handle's
+        SSM row only if the handle held one."""
         assert not self.slot_pages[slot], \
             f"attach_pages into non-empty slot {slot}"
         if len(page_ids) > self.pages_per_slot:
@@ -320,7 +329,8 @@ class StatePool:
                              f"{self.pages_per_slot}-page slot row")
         self.table[slot, :len(page_ids)] = page_ids
         self.slot_pages[slot] = list(page_ids)
-        self._ssm_rows_held -= 1
+        if has_ssm:
+            self._ssm_rows_held -= 1
         self._account()
 
     def drop_handle(self, handle: PreemptedState) -> None:
@@ -328,7 +338,8 @@ class StatePool:
         away and the request restarts from its prompt)."""
         for pid in handle.page_ids:
             self._deref(pid)
-        self._ssm_rows_held -= 1
+        if handle.ssm != ():
+            self._ssm_rows_held -= 1
         self._account()
 
 

@@ -1,5 +1,7 @@
-from .hardware import HardwareConfig, ModelSpec, PROTOTYPE_2X2, PAPER_SPECS, scaled, spec_from_config
+from .hardware import (HardwareConfig, ModelSpec, NDPConfig, PROTOTYPE_2X2,
+                       PROTOTYPE_2X2_NDP, PAPER_SPECS, scaled,
+                       spec_from_config, with_ndp)
 from .workload import LayerWorkload, Request, iteration_workloads, make_requests, make_layer_workload
 from .engine import ChipletSim, LayerResult, simulate_layer, simulate_naive_fsedp
 from .e2e import E2EResult, run_e2e
-from .modes import ModeResult, rank_modes, simulate_mode
+from .modes import ModeResult, rank_modes, simulate_hybrid, simulate_mode

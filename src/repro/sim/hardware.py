@@ -11,6 +11,20 @@ from typing import Optional
 
 
 @dataclass(frozen=True)
+class NDPConfig:
+    """Optional near-memory compute tier (NDP/PIM dies beside the DRAM
+    stacks).  All figures are *tier totals*, not per-die: the tier is a
+    pool of weak MACs sitting on very wide local DRAM ports, so cold
+    experts execute in place without crossing the DDR bottleneck.
+    Defaults follow the HD-MoE / GPU-NDP operating point: ~1/16 of the
+    2x2 array's compute, ~4x its external DDR bandwidth locally.
+    """
+    tops: float = 1.2e12              # tier-total near-memory ops/s
+    gbps: float = 409.6e9             # tier-total local DRAM bandwidth (bytes/s)
+    buffer_bytes: int = 2 * 2 ** 20   # per-tier staging SRAM
+
+
+@dataclass(frozen=True)
 class HardwareConfig:
     rows: int = 2
     cols: int = 2
@@ -23,6 +37,7 @@ class HardwareConfig:
     bytes_per_param: int = 2          # bf16 weights
     bytes_per_act: int = 2
     freq_hz: float = 800e6
+    ndp: Optional[NDPConfig] = None   # near-memory tier (None = homogeneous)
 
     @property
     def num_chiplets(self) -> int:
@@ -43,11 +58,35 @@ class HardwareConfig:
 PROTOTYPE_2X2 = HardwareConfig()
 
 
-def scaled(rows: int, cols: int, base: HardwareConfig = PROTOTYPE_2X2) -> HardwareConfig:
-    """Scale the array (DDR channels grow with the array edge, as in §VI-E)."""
+def with_ndp(base: HardwareConfig = PROTOTYPE_2X2,
+             ndp: Optional[NDPConfig] = None) -> HardwareConfig:
+    """The heterogeneous variant of an array: same chiplets + DDR, plus a
+    near-memory tier.  The NDP defaults scale with the base array's DDR
+    bandwidth (local ports are ~4x the external channels)."""
     import dataclasses
-    return dataclasses.replace(base, rows=rows, cols=cols,
-                               ddr_channels=base.ddr_channels * max(1, rows // 2))
+    if ndp is None:
+        ndp = NDPConfig(gbps=4.0 * base.ddr_total)
+    return dataclasses.replace(base, ndp=ndp)
+
+
+# the prototype with the default near-memory tier attached
+PROTOTYPE_2X2_NDP = with_ndp()
+
+
+def scaled(rows: int, cols: int, base: HardwareConfig = PROTOTYPE_2X2) -> HardwareConfig:
+    """Scale the array (DDR channels grow with the array *edge*, as in
+    §VI-E — ``max(rows, cols)``, so a 2x4 and a 4x2 array get the same
+    DDR and odd edges still scale).  A base NDP tier's local bandwidth
+    grows with the DDR it sits beside."""
+    import dataclasses
+    channels = base.ddr_channels * max(2, max(rows, cols)) // 2
+    out = dataclasses.replace(base, rows=rows, cols=cols,
+                              ddr_channels=channels)
+    if base.ndp is not None:
+        ratio = channels / max(1, base.ddr_channels)
+        out = dataclasses.replace(out, ndp=dataclasses.replace(
+            base.ndp, gbps=base.ndp.gbps * ratio))
+    return out
 
 
 @dataclass(frozen=True)
@@ -66,23 +105,38 @@ class ModelSpec:
     bytes_per_param: Optional[int] = None  # streamed expert-weight bytes;
     #   None = the hardware default (bf16).  1 models int8/fp8 streaming.
 
+    def expert_bytes_on(self, hw: HardwareConfig) -> int:
+        """Streamed DDR bytes of one expert's weights on ``hw`` — a
+        ``None`` ``bytes_per_param`` falls back to the *hardware*
+        default, so a 4-byte hardware profile streams 4-byte weights."""
+        return self.n_mats * self.d_model * self.d_expert \
+            * (self.bytes_per_param or hw.bytes_per_param)
+
     @property
     def expert_bytes(self) -> int:
-        return self.n_mats * self.d_model * self.d_expert \
-            * (self.bytes_per_param or 2)
+        """Hardware-free view: resolves a ``None`` ``bytes_per_param``
+        against the Table-I prototype's default.  Call sites that know
+        their :class:`HardwareConfig` use :meth:`expert_bytes_on`."""
+        return self.expert_bytes_on(PROTOTYPE_2X2)
 
     def expert_flops_per_token(self) -> float:
         return 2.0 * self.n_mats * self.d_model * self.d_expert
 
 
-def spec_from_config(cfg, weight_bytes: Optional[int] = None) -> ModelSpec:
+def spec_from_config(cfg, weight_bytes: Optional[int] = None, *,
+                     hw: Optional[HardwareConfig] = None) -> ModelSpec:
     """Build a sim spec from a repro ModelConfig (must have MoE).
 
     ``weight_bytes`` overrides the streamed expert-weight storage width
     (e.g. 1 for an int8/fp8 ``ExecutionSpec.weight_dtype`` run) so the
     simulator referee and the closed-form cost model agree on DDR bytes.
+    With ``weight_bytes=None``, ``hw`` pins the spec's weight width to
+    that hardware's ``bytes_per_param`` (otherwise it stays ``None`` and
+    resolves per call site via :meth:`ModelSpec.expert_bytes_on`).
     """
     assert cfg.moe is not None
+    if weight_bytes is None and hw is not None:
+        weight_bytes = hw.bytes_per_param
     return ModelSpec(
         name=cfg.name, d_model=cfg.d_model, d_expert=cfg.moe.d_expert,
         num_experts=cfg.moe.num_experts, top_k=cfg.moe.top_k,

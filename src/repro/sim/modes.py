@@ -173,7 +173,8 @@ def simulate_mode(hw: HardwareConfig, spec: ModelSpec, mode: str,
 
 def simulate_ep(hw: HardwareConfig, spec: ModelSpec, tokens: int, *,
                 capacity_factor: float = 1.25,
-                act_bytes: Optional[int] = None) -> ModeResult:
+                act_bytes: Optional[int] = None,
+                loads=None) -> ModeResult:
     """Latency of one MoE layer under the EP baseline family
     (``core.baselines.moe_ep``): tokens stay sharded, every chiplet owns
     E/P full experts, dispatched rows all-to-all to the owner and back.
@@ -183,6 +184,12 @@ def simulate_ep(hw: HardwareConfig, spec: ModelSpec, tokens: int, *,
     hop latency), deliberately not the closed-form ``(P-1)/P`` bytes
     the cost model (``autotune.ep_cost``) uses — so cross-family rank
     agreement is a meaningful check, matching the stream/index ring.
+
+    ``loads`` (a normalized per-expert load vector) switches the expert
+    terms from the padded-capacity model to the observed-gating model:
+    dispatch rows, expert compute, and the local weight-shard stream
+    scale with the actual assignments (``None`` is bit-identical to the
+    padded model).
     """
     P = hw.num_chiplets
     E, d, de = spec.num_experts, spec.d_model, spec.d_expert
@@ -192,23 +199,112 @@ def simulate_ep(hw: HardwareConfig, spec: ModelSpec, tokens: int, *,
     E_loc = E // P
     T_loc = tokens / P
     C = _capacity(max(1, math.ceil(T_loc)), spec, capacity_factor)
+    rows, active = _load_rows(E, C, T_loc * spec.top_k, loads)
 
     # one a2a phase: each source sends (P-1) peer messages of its
-    # per-destination dispatch rows, serialized on the source's port
-    msg = E_loc * C * d * ab
+    # per-destination dispatch rows (rows/E routed rows per expert, E_loc
+    # experts per destination), serialized on the source's port
+    msg = (rows / E) * E_loc * d * ab
     t_a2a = max(
         sum(msg / hw.d2d_gbps + hw.hops(src, (src + s) % P)
             * hw.d2d_hop_latency for s in range(1, P))
         for src in range(P))
 
     dispatch_flops = 2.0 * T_loc * E * C * d * 2 + 2.0 * T_loc * d * E
-    flops = 2.0 * spec.n_mats * E_loc * (P * C) * d * de + dispatch_flops
+    flops = 2.0 * spec.n_mats * rows * d * de + dispatch_flops
     t_comp = flops / hw.tops
-    ddr = spec.n_mats * E_loc * d * de \
+    ddr = spec.n_mats * (active / E) * E_loc * d * de \
         * (spec.bytes_per_param or hw.bytes_per_param)
     t_ddr = ddr / (hw.ddr_total / P)
     lat = t_a2a + max(t_comp, t_ddr) + t_a2a
     return ModeResult("ep", lat, t_comp, 0.0, 2 * t_a2a, ddr * P)
+
+
+def simulate_hybrid(hw: HardwareConfig, spec: ModelSpec, tokens: int, *,
+                    capacity_factor: float = 1.25,
+                    act_bytes: Optional[int] = None,
+                    loads=None, hot_ids=None) -> ModeResult:
+    """Latency of one MoE layer under two-tier hot/cold placement
+    (``core.strategy`` ``hybrid``): hot experts stream through the fast
+    chiplet array as a double-buffered expert flow (DDR load chain +
+    D2D ring broadcast feeding whole-array compute), cold experts
+    execute *in place* on the near-memory tier (``hw.ndp``), and the
+    layer finishes at ``max(tier_fast, tier_ndp)``.
+
+    Discrete twin of ``core.autotune.hybrid_cost``: serial per-expert
+    load/compute chains per tier instead of closed-form aggregates, so
+    rank agreement between the two is a meaningful check.  The
+    structural tax of global placement is modeled too: routing +
+    capacity dispatch run un-sharded on one fast die before the tiers
+    start (the hot/cold partition is not aligned with any token
+    sharding).
+
+    ``hot_ids`` pins the fast-tier expert set (e.g. the static top-N
+    baseline, or the engine's EMA partition); ``None`` sweeps every
+    prefix of the load-descending expert order and keeps the best —
+    the idealized dynamic repartition.  ``loads`` as in
+    :func:`simulate_mode`; ``None`` models uniform padded capacity.
+    """
+    if hw.ndp is None:
+        raise ValueError("simulate_hybrid needs a near-memory tier "
+                         "(HardwareConfig.ndp)")
+    P = hw.num_chiplets
+    E, d, de = spec.num_experts, spec.d_model, spec.d_expert
+    wb = spec.bytes_per_param or hw.bytes_per_param
+    ab = act_bytes if act_bytes is not None else hw.bytes_per_act
+    eb = spec.n_mats * d * de * wb
+    C = _capacity(max(1, tokens), spec, capacity_factor)
+    if loads is None:
+        rows_e = np.full(E, float(C))
+    else:
+        l = np.asarray(loads, np.float64)
+        rows_e = np.minimum(float(C), tokens * spec.top_k * l)
+
+    # un-sharded routing + capacity dispatch on one fast die — the
+    # centralization tax of global hot/cold placement
+    dispatch_flops = 2.0 * tokens * E * C * d * 2 + 2.0 * tokens * d * E
+    t_dispatch = dispatch_flops / hw.tops
+
+    def _tiers(hot: frozenset) -> float:
+        # fast tier: serial DDR chain + ring broadcast feeding the
+        # whole-array compute chain, double-buffered (one flow)
+        load_done = comp_done = 0.0
+        order = np.argsort(-rows_e, kind="stable")
+        for e in order:
+            r = rows_e[int(e)]
+            if loads is not None and r < 0.5:
+                continue                       # dynamic flow skips idle
+            flops = 2.0 * spec.n_mats * r * d * de
+            if int(e) in hot:
+                load_done += eb / hw.ddr_total
+                ring = load_done + (P - 1) * (eb / (P * hw.d2d_gbps)
+                                              + hw.d2d_hop_latency)
+                comp_done = max(comp_done, ring) \
+                    + flops / (hw.tops * P)
+        # near-memory tier: serial per-expert compute/local-read overlap
+        ndp_done = 0.0
+        cold_rows = 0.0
+        for e in range(E):
+            r = rows_e[e]
+            if e in hot or (loads is not None and r < 0.5):
+                continue
+            flops = 2.0 * spec.n_mats * r * d * de
+            ndp_done += max(flops / hw.ndp.tops, eb / hw.ndp.gbps)
+            cold_rows += r
+        if cold_rows:
+            # dispatched rows shuttle to the memory tier and back
+            ndp_done += 2.0 * cold_rows * d * ab / hw.d2d_gbps \
+                + 2.0 * hw.d2d_hop_latency
+        return max(comp_done, ndp_done)
+
+    if hot_ids is not None:
+        best = _tiers(frozenset(int(e) for e in hot_ids))
+    else:
+        desc = np.argsort(-rows_e, kind="stable")
+        best = min(_tiers(frozenset(int(e) for e in desc[:H]))
+                   for H in range(E + 1))
+    lat = t_dispatch + best
+    return ModeResult("hybrid", lat, best, 0.0, t_dispatch, eb * E)
 
 
 def simulate_trajectory(hw: HardwareConfig, spec: ModelSpec, counts, *,
@@ -249,7 +345,7 @@ def simulate_trajectory(hw: HardwareConfig, spec: ModelSpec, counts, *,
     resident = frozenset(int(e) for e in resident) if resident else frozenset()
     tops = hw.tops * hw.num_chiplets
     ddr = hw.ddr_total
-    t_load = spec.expert_bytes / ddr
+    t_load = spec.expert_bytes_on(hw) / ddr
     load_done = 0.0
     comp_done = 0.0
     for e in order:
@@ -279,7 +375,11 @@ def replay_trace(hw: HardwareConfig, spec: ModelSpec, trace, *,
     static records replay the shape-only capacity-padded plan.  Records
     with no routed tokens are skipped (no expert flow, no step time).
     Records carrying a ``resident`` list (the engine's EMA-hot weight
-    tier) skip those experts' DDR loads during replay.
+    tier) skip those experts' DDR loads during replay.  Records carrying
+    a ``hot`` list (the hybrid strategy's fast-tier partition) replay
+    through :func:`simulate_hybrid` when the hardware has a near-memory
+    tier (on homogeneous hardware the partition is placement-only and
+    the record replays like any other).
     """
     total = 0.0
     for rec in trace:
@@ -287,6 +387,14 @@ def replay_trace(hw: HardwareConfig, spec: ModelSpec, trace, *,
             continue                    # cache_hit/preempt/restore events
         counts = np.asarray(rec["counts"], np.float64)
         if counts.sum() <= 0:
+            continue
+        if hw.ndp is not None and rec.get("hot") is not None:
+            tokens = max(1, int(math.ceil(counts.sum()
+                                          / max(1, spec.top_k))))
+            total += simulate_hybrid(
+                hw, spec, tokens, capacity_factor=capacity_factor,
+                loads=counts / counts.sum(),
+                hot_ids=rec["hot"]).latency
             continue
         resident = rec.get("resident")
         if rec.get("schedule") == "dynamic":
@@ -326,7 +434,8 @@ def schedule_step_times(hw: HardwareConfig, spec: ModelSpec, counts, *,
 
 def rank_families(hw: HardwareConfig, spec: ModelSpec, tokens: int, *,
                   B: int, S: int,
-                  capacity_factor: float = 1.25) -> Dict[str, float]:
+                  capacity_factor: float = 1.25,
+                  loads=None) -> Dict[str, float]:
     """Simulated latency per execution *family* of the (B, S) shape —
     the independent referee of the cross-family ``auto`` planner
     (``repro.core.strategy.family_costs``).
@@ -336,6 +445,10 @@ def rank_families(hw: HardwareConfig, spec: ModelSpec, tokens: int, *,
     out of the race (its degraded slice dataflow is exactly ``tp``,
     which has its own entry).  ``ep`` is the discrete all-to-all
     simulation when E % P == 0 and the tokens can seq- or batch-shard.
+    ``hybrid`` (two-tier hot/cold placement) joins the race only when
+    the hardware carries a near-memory tier (``hw.ndp``).  ``loads``
+    conditions every family on a normalized per-expert load vector,
+    mirroring ``family_costs(load=...)``.
     """
     from repro.core.autotune import _micro_candidates, feasible_modes
     from repro.core.strategy import ep_feasible
@@ -346,13 +459,20 @@ def rank_families(hw: HardwareConfig, spec: ModelSpec, tokens: int, *,
     if ring:
         out["fse_dp"] = min(
             simulate_mode(hw, spec, m, tokens, micro_slices=M,
-                          capacity_factor=capacity_factor).latency
+                          capacity_factor=capacity_factor,
+                          loads=loads).latency
             for m in ring for M in _micro_candidates(de_loc, 0))
     if ep_feasible(B, S, spec.num_experts, P):
         out["ep"] = simulate_ep(hw, spec, tokens,
-                                capacity_factor=capacity_factor).latency
+                                capacity_factor=capacity_factor,
+                                loads=loads).latency
     out["tp"] = simulate_mode(hw, spec, "slice", tokens,
-                              capacity_factor=capacity_factor).latency
+                              capacity_factor=capacity_factor,
+                              loads=loads).latency
+    if hw.ndp is not None:
+        out["hybrid"] = simulate_hybrid(hw, spec, tokens,
+                                        capacity_factor=capacity_factor,
+                                        loads=loads).latency
     return out
 
 

@@ -1,0 +1,264 @@
+"""Two-tier hybrid hot/cold placement: bit-identity (placement changes
+where experts run, never the output), cost-model vs simulator rank
+agreement on the committed HYBRID_SWEEP, dynamic EMA repartition vs the
+static top-N baseline, and the serving engine's hot-tier trace."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.configs.base import MoEConfig
+from repro.core import autotune, gating
+from repro.core import strategy as strat
+from repro.core.strategy import HYBRID_SWEEP, default_hot
+from repro.models import api
+from repro.models import moe as moe_mod
+from repro.sim import hardware as hwmod
+from repro.sim import modes as sim_modes
+from repro.sim import workload
+
+
+def _ndp_hw(P):
+    base = {2: hwmod.scaled(1, 2), 4: hwmod.scaled(2, 2),
+            8: hwmod.scaled(2, 4)}[P]
+    return hwmod.with_ndp(base)
+
+
+def _loads(E, zipf_s, seed=0):
+    if zipf_s <= 0:
+        return None
+    rng = np.random.default_rng(seed)
+    return workload.sample_expert_probs(E, rng, zipf_s=zipf_s)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: the tier split is placement only
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_moe():
+    moe = MoEConfig(num_experts=8, d_expert=32, top_k=2)
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), 16, moe, "swiglu",
+                              jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (24, 16), jnp.float32)
+    routing = gating.route(params["router"], x, top_k=2)
+    return moe, params, x, routing
+
+
+def test_hybrid_bit_identical_to_capacity(tiny_moe):
+    """Every partition width — including the forced single-tier extremes
+    H=0 (all near-memory) and H=E (all fast) — produces the exact
+    capacity-path output."""
+    moe, params, x, routing = tiny_moe
+    ref = moe_mod.moe_capacity(params, x, routing, moe, "swiglu")
+    for H in range(moe.num_experts + 1):
+        got = moe_mod.moe_hybrid(params, x, routing, moe, "swiglu",
+                                 hot_experts=H)
+        assert jnp.array_equal(ref, got), f"hot_experts={H} diverged"
+
+
+def test_hybrid_bit_identical_sorted_dispatch(tiny_moe):
+    moe, params, x, routing = tiny_moe
+    with moe_mod.use_sorted_dispatch(True):
+        ref = moe_mod.moe_capacity(params, x, routing, moe, "swiglu")
+        got = moe_mod.moe_hybrid(params, x, routing, moe, "swiglu",
+                                 hot_experts=3)
+    assert jnp.array_equal(ref, got)
+
+
+def test_hybrid_strategy_matches_capacity_strategy(tiny_moe):
+    moe, params, x, _ = tiny_moe
+    xb = x[None]
+    y_cap, aux_cap = strat.get_strategy("capacity").execute(
+        params, xb, moe, "swiglu")
+    y_hyb, aux_hyb = strat.get_strategy("hybrid").execute(
+        params, xb, moe, "swiglu")
+    assert jnp.array_equal(y_cap, y_hyb)
+    assert float(aux_cap) == float(aux_hyb)
+
+
+def test_hybrid_bit_identical_with_host_schedule(tiny_moe):
+    """A host EMA schedule only reorders/partitions — same outputs."""
+    from repro.core import trajectory
+    moe, params, x, routing = tiny_moe
+    counts = np.asarray(gating.expert_token_counts(routing))
+    sched = trajectory.build_schedule(counts, policy="dynamic")
+    ref = moe_mod.moe_capacity(params, x, routing, moe, "swiglu")
+    got = moe_mod.moe_hybrid(params, x, routing, moe, "swiglu",
+                             hot_experts=2, schedule=sched)
+    assert jnp.array_equal(ref, got)
+
+
+# ---------------------------------------------------------------------------
+# the two-tier hardware model + registry plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_hybrid_registered_and_plan_carries_hot_width():
+    assert "hybrid" in strat.available()
+    assert strat.FAMILIES == strat.BASE_FAMILIES + ("hybrid",)
+    hw = _ndp_hw(4)
+    profile = autotune.HardwareProfile.from_chiplet(hw)
+    assert profile.ndp_flops == hw.ndp.tops
+    assert profile.ndp_bw == hw.ndp.gbps
+    moe = MoEConfig(num_experts=64, d_expert=1408, top_k=6)
+    ctx = strat.StrategyContext(B=2, S=1, d_model=512, moe=moe,
+                                activation="swiglu", P=4, profile=profile)
+    plan = strat.get_strategy("hybrid").plan(ctx)
+    assert plan.family == "hybrid"
+    assert plan.hot_experts is not None
+    assert 0 <= plan.hot_experts <= moe.num_experts
+    assert plan.predicted_s > 0
+
+
+def test_hybrid_out_of_race_on_homogeneous_hardware():
+    """No NDP tier -> family_costs has no hybrid row; hybrid_cost and
+    simulate_hybrid refuse; the strategy still executes (placement is
+    a no-op for numerics)."""
+    profile = autotune.HardwareProfile.from_chiplet(hwmod.PROTOTYPE_2X2)
+    moe = MoEConfig(num_experts=16, d_expert=512, top_k=2)
+    costs = strat.family_costs(8, 1, 512, moe, "swiglu", 4, profile=profile)
+    assert "hybrid" not in costs
+    with pytest.raises(ValueError):
+        autotune.hybrid_cost(8, 1, 512, 16, 512, 2, 1.25, 3, 4, profile)
+    with pytest.raises(ValueError):
+        sim_modes.simulate_hybrid(hwmod.PROTOTYPE_2X2,
+                                  hwmod.ModelSpec("s", 512, 512, 16, 2), 8)
+
+
+def test_hybrid_cost_prefers_fewer_hot_when_weight_bound():
+    """Low-batch decode is DDR-bound: the optimal partition pushes cold
+    experts near memory instead of streaming everything."""
+    profile = autotune.HardwareProfile.from_chiplet(_ndp_hw(4))
+    all_fast = autotune.hybrid_cost(2, 1, 512, 64, 1408, 6, 1.25, 3, 4,
+                                    profile, hot_n=64)["total_s"]
+    best = autotune.hybrid_cost(2, 1, 512, 64, 1408, 6, 1.25, 3, 4,
+                                profile)
+    assert best["total_s"] < all_fast
+    assert best["hot_n"] < 64
+
+
+# ---------------------------------------------------------------------------
+# cost model vs simulator referee on the committed sweep
+# ---------------------------------------------------------------------------
+
+
+def test_hybrid_rank_agreement_on_sweep():
+    """Cost-model family winner agrees with the simulator referee on
+    >=80% of HYBRID_SWEEP, and hybrid / EP / FSE-DP each win at least
+    one simulated point (the race is not degenerate)."""
+    agree, rows, winners = 0, [], set()
+    for (B, S, E, de, P, zs) in HYBRID_SWEEP:
+        hw = _ndp_hw(P)
+        profile = autotune.HardwareProfile.from_chiplet(hw)
+        moe = MoEConfig(num_experts=E, top_k=2, d_expert=de)
+        loads = _loads(E, zs)
+        lt = None if loads is None else tuple(float(v) for v in loads)
+        costs = strat.family_costs(B, S, 512, moe, "swiglu", P,
+                                   profile=profile, load=lt)
+        assert "hybrid" in costs
+        chosen = strat.pick_family(costs)
+        sim = sim_modes.rank_families(hw, hwmod.ModelSpec("s", 512, de, E, 2),
+                                      B * S, B=B, S=S, loads=loads)
+        assert "hybrid" in sim
+        best = min((f for f in strat.FAMILIES if f in sim),
+                   key=lambda f: sim[f])
+        winners.add(best)
+        agree += chosen == best
+        rows.append((B, S, E, de, P, zs, chosen, best))
+    frac = agree / len(HYBRID_SWEEP)
+    assert frac >= 0.8, f"hybrid rank agreement {frac:.2f} < 0.8: {rows}"
+    assert {"hybrid", "ep", "fse_dp"} <= winners, \
+        f"sweep is degenerate — sim winners {winners}: {rows}"
+
+
+def test_dynamic_repartition_beats_static_topn():
+    """On Zipf-skewed load in the compute-sensitive token regime, the
+    load-aware partition (the engine's EMA repartition, idealized)
+    beats the static id-prefix top-N baseline; the free per-step sweep
+    is at least as good again."""
+    hw = _ndp_hw(4)
+    wins = 0
+    cases = [(64, 1408, 256, 1.2), (64, 1408, 512, 1.2),
+             (64, 768, 512, 1.4), (32, 1408, 256, 1.2)]
+    for (E, de, tokens, zs) in cases:
+        spec = hwmod.ModelSpec("s", 512, de, E, 2)
+        loads = _loads(E, zs, seed=7)
+        N = default_hot(E)
+        static = sim_modes.simulate_hybrid(hw, spec, tokens, loads=loads,
+                                           hot_ids=range(N)).latency
+        dyn_ids = np.argsort(-loads, kind="stable")[:N]
+        dynamic = sim_modes.simulate_hybrid(hw, spec, tokens, loads=loads,
+                                            hot_ids=dyn_ids).latency
+        sweep = sim_modes.simulate_hybrid(hw, spec, tokens,
+                                          loads=loads).latency
+        assert sweep <= dynamic + 1e-12
+        wins += dynamic < static
+    assert wins == len(cases), \
+        f"dynamic repartition won only {wins}/{len(cases)}"
+
+
+def test_replay_trace_prices_hot_records():
+    """Trace records carrying ``hot`` ids replay through the two-tier
+    referee on NDP hardware and fall back to the homogeneous path
+    otherwise."""
+    hw = _ndp_hw(4)
+    spec = hwmod.ModelSpec("s", 512, 1408, 8, 2)
+    trace = [{"iter": 0, "layer": 0, "schedule": "dynamic",
+              "counts": [5, 3, 0, 0, 1, 0, 0, 0], "hot": [0, 1],
+              "order": [0, 1, 4, 2, 3, 5, 6, 7]}]
+    t_ndp = sim_modes.replay_trace(hw, spec, trace)
+    t_flat = sim_modes.replay_trace(hwmod.PROTOTYPE_2X2, spec, trace)
+    assert t_ndp > 0 and t_flat > 0
+    assert t_ndp != t_flat
+
+
+# ---------------------------------------------------------------------------
+# serving engine plumbing (trace hot ids + modeled clock)
+# ---------------------------------------------------------------------------
+
+
+def test_layer_s_two_tier_pricing():
+    cfg = reduced_config("granite-moe-1b-a400m").replace(dtype="float32")
+    flat = autotune.ServingCostModel.from_config(cfg)
+    ndp = autotune.ServingCostModel.from_config(
+        cfg, profile=autotune.HardwareProfile.from_chiplet_array(
+            hwmod.with_ndp()))
+    counts = [6, 3, 1, 0] + [0] * (cfg.moe.num_experts - 4)
+    hot = [0, 1]
+    # homogeneous profile: hot is accounting-inert
+    assert flat.layer_s(counts, dynamic=True, hot=hot) == \
+        flat.layer_s(counts, dynamic=True)
+    # two-tier profile: the partition changes the modeled seconds
+    assert ndp.layer_s(counts, dynamic=True, hot=hot) != \
+        ndp.layer_s(counts, dynamic=True)
+    assert ndp.layer_s(counts, dynamic=True, hot=hot) > 0
+
+
+def test_engine_records_hot_partition():
+    """A hybrid-spec engine stamps each MoE trace record with the
+    fast-tier ``hot`` ids (EMA repartition, like ``resident``) and
+    emits the same tokens as the capacity strategy."""
+    from repro.serving import Engine, ServeConfig
+    cfg = reduced_config("granite-moe-1b-a400m").replace(dtype="float32")
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+
+    def run(strategy, hot=None):
+        spec = strat.ExecutionSpec(strategy=strategy, schedule="dynamic")
+        eng = Engine(params, cfg, ServeConfig(
+            max_batch=2, max_ctx=32, spec=spec, hot_experts=hot))
+        rid = eng.submit([1, 2, 3, 4], max_new=4)
+        outs = eng.run()
+        return eng, outs[rid]
+
+    eng_h, toks_h = run("hybrid", hot=2)
+    eng_c, toks_c = run("capacity")
+    assert toks_h == toks_c                      # placement-only
+    moe_recs = [r for r in eng_h.trace if "counts" in r]
+    assert moe_recs and all("hot" in r for r in moe_recs)
+    assert all(len(r["hot"]) == 2 for r in moe_recs)
+    assert "hybrid_repartitions" in eng_h.stats
+    # capacity engine never stamps hot ids
+    assert all("hot" not in r for r in eng_c.trace)

@@ -123,3 +123,50 @@ def test_no_deadlock_property(seed, tokens):
                              num_chiplets=HW.num_chiplets, seed=seed)[0]
     r = simulate_layer(HW, SPEC, wl, "fse_dp_paired")
     assert np.isfinite(r.latency)
+
+
+def test_scaled_ddr_channels_track_longest_edge():
+    """§VI-E scaling regression: DDR channel count (and with it
+    aggregate DDR bandwidth) scales with the array's longest edge, so
+    transposed arrays are symmetric and non-square arrays are not stuck
+    at the row count."""
+    from repro.sim import with_ndp
+
+    def ch(hw):
+        return hw.ddr_channels
+
+    assert ch(scaled(2, 2)) == ch(PROTOTYPE_2X2) == 4
+    assert ch(scaled(2, 4)) == ch(scaled(4, 2)) == 8    # was 4 vs 8
+    assert ch(scaled(3, 3)) == 6
+    assert scaled(2, 4).ddr_total == scaled(4, 2).ddr_total
+    # the near-memory tier's local bandwidth scales with the same ratio
+    a, b = with_ndp(scaled(2, 4)), with_ndp(scaled(4, 2))
+    assert a.ndp.gbps == b.ndp.gbps > with_ndp(scaled(2, 2)).ndp.gbps
+
+
+def test_expert_bytes_follow_hardware_dtype():
+    """ModelSpec.expert_bytes no longer hardcodes bf16: with no
+    explicit weight dtype the per-expert footprint follows the
+    hardware's bytes_per_param."""
+    from dataclasses import replace
+
+    from repro.sim import ModelSpec, spec_from_config
+    from repro.sim.modes import simulate_mode
+    from repro.configs import reduced_config
+
+    hw4 = replace(PROTOTYPE_2X2, bytes_per_param=4)
+    spec = ModelSpec("s", 256, 512, 8, 2)     # bytes_per_param=None
+    assert spec.expert_bytes_on(hw4) == 2 * spec.expert_bytes_on(PROTOTYPE_2X2)
+    assert spec.expert_bytes == spec.expert_bytes_on(PROTOTYPE_2X2)
+    # explicit dtype still pins the footprint regardless of hardware
+    pinned = replace(spec, bytes_per_param=2)
+    assert pinned.expert_bytes_on(hw4) == spec.expert_bytes_on(PROTOTYPE_2X2)
+    # spec_from_config threads the hardware default through
+    cfg = reduced_config("granite-moe-1b-a400m")
+    s4 = spec_from_config(cfg, hw=hw4)
+    s2 = spec_from_config(cfg, hw=PROTOTYPE_2X2)
+    assert s4.bytes_per_param == 4 and s2.bytes_per_param == 2
+    # and the referee's DDR traffic doubles with the wider dtype
+    t2 = simulate_mode(PROTOTYPE_2X2, spec, "stream", 4)
+    t4 = simulate_mode(hw4, spec, "stream", 4)
+    assert t4.ddr_bytes == 2 * t2.ddr_bytes

@@ -331,3 +331,37 @@ def test_diurnal_mix_modulates_arrivals_only():
 def test_unknown_mix_component_rejected():
     with pytest.raises(ValueError, match="unknown traffic mix"):
         TrafficConfig(mix="poisson+lunar")
+
+
+def test_detach_attach_ssm_accounting_pure_attention():
+    """Regression: ``detach_slot`` used to bump ``_ssm_rows_held``
+    unconditionally, so a pure-attention model (no SSM state to
+    snapshot) leaked phantom SSM bytes into ``resident_state_bytes``
+    across every preempt/restore cycle."""
+    pool = StatePool(max_batch=2, max_ctx=16, page_size=4,
+                     bytes_per_page=100, ssm_bytes_per_row=1000)
+    pool.ensure(0, 8)
+    base = pool.stats["resident_state_bytes"]
+    assert base == 200                       # 2 pages, zero SSM rows
+
+    # attention-only preemption: handle carries pages but no SSM snapshot
+    held = pool.detach_slot(0, has_ssm=False)
+    assert pool._ssm_rows_held == 0
+    assert pool.stats["resident_state_bytes"] == base
+    pool.attach_pages(0, held, has_ssm=False)
+    assert pool._ssm_rows_held == 0
+    assert pool.stats["resident_state_bytes"] == base
+
+    # hybrid-model preemption: the snapshot is real and is accounted
+    held = pool.detach_slot(0, has_ssm=True)
+    assert pool._ssm_rows_held == 1
+    assert pool.stats["resident_state_bytes"] == base + 1000
+    pool.attach_pages(0, held, has_ssm=True)
+    assert pool._ssm_rows_held == 0
+    assert pool.stats["resident_state_bytes"] == base
+
+    # drop_handle only releases rows the handle actually snapshot
+    from repro.serving.statepool import PreemptedState
+    pool.drop_handle(PreemptedState(request=None, page_ids=[],
+                                    cache_len=0, ssm=()))
+    assert pool._ssm_rows_held == 0          # ssm=() -> no decrement
